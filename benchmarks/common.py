@@ -1,0 +1,113 @@
+"""Shared benchmark machinery.
+
+Every per-figure module exposes ``run(full: bool) -> list[dict]``; rows are
+printed as CSV by ``benchmarks.run``. ``full=False`` (default) runs a
+CPU-budget configuration that preserves the qualitative ordering the paper
+reports; ``REPRO_BENCH_FULL=1`` switches to paper-scale settings (8 clients,
+5 seeds, full round counts)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import run_federated
+from repro.core.protocol import ModelSpec
+from repro.data.partition import partition_dirichlet, partition_major
+from repro.data.synthetic import make_classification_data
+from repro.nn.vision import get_vision_model
+
+FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
+
+# synthetic stand-ins for the paper's datasets (offline container): same
+# image geometry, class count and non-IID partition structure
+DATASETS = {
+    "mnist": dict(shape=(28, 28, 1), n_classes=10, per_client=1000,
+                  p_major=0.8, sep=2.5),
+    "famnist": dict(shape=(28, 28, 1), n_classes=10, per_client=1000,
+                    p_major=0.8, sep=1.8),
+    "cifar10": dict(shape=(32, 32, 3), n_classes=10, per_client=3000,
+                    p_major=0.3, sep=0.7),
+    "kvasir": dict(shape=(25, 20, 3), n_classes=8, per_client=750,
+                   p_major=None, dirichlet=0.5, sep=1.0),
+    "camelyon": dict(shape=(32, 32, 3), n_classes=2, per_client=700,
+                     p_major=None, dirichlet=1.0, sep=0.4),
+}
+
+
+def spec_of(name: str, shape, n_classes) -> ModelSpec:
+    vm = get_vision_model(name)
+    return ModelSpec(name, lambda k: vm.init(k, shape, n_classes), vm.apply)
+
+
+def federation_data(dataset: str, n_clients: int, seed: int, *,
+                    n_train_factor: float = 1.0, p_major=None):
+    d = DATASETS[dataset]
+    key = jax.random.PRNGKey(seed)
+    per_client = int(d["per_client"] * n_train_factor)
+    n_total = per_client * n_clients * 2
+    x, y = make_classification_data(key, n_total, d["shape"], d["n_classes"],
+                                    sep=d["sep"], task_seed=hash(dataset) % 997)
+    xt, yt = make_classification_data(jax.random.fold_in(key, 1),
+                                      1000, d["shape"], d["n_classes"],
+                                      sep=d["sep"], task_seed=hash(dataset) % 997)
+    rng = np.random.default_rng(seed)
+    pm = p_major if p_major is not None else d.get("p_major")
+    if pm is not None:
+        idxs = partition_major(rng, np.asarray(y), n_clients, per_client, pm,
+                               d["n_classes"])
+    else:
+        idxs = partition_dirichlet(rng, np.asarray(y), n_clients,
+                                   d.get("dirichlet", 0.5))
+        idxs = [i[:per_client] for i in idxs]
+    return [(x[i], y[i]) for i in idxs], (xt, yt), d
+
+
+def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
+                  rounds: int, seeds: Sequence[int], batch_size: int = 250,
+                  dp: bool = True, p_major=None, private_arch: str = "mlp",
+                  proxy_arch: str = "mlp", alpha: float = 0.5,
+                  sigma: float = 1.0, clip: float = 1.0,
+                  n_train_factor: float = 1.0) -> List[Dict]:
+    rows = []
+    for method in methods:
+        accs, eps_out = [], None
+        t0 = time.time()
+        for seed in seeds:
+            client_data, test, d = federation_data(
+                dataset, n_clients, seed, p_major=p_major,
+                n_train_factor=n_train_factor)
+            priv = spec_of(private_arch, d["shape"], d["n_classes"])
+            prox = spec_of(proxy_arch, d["shape"], d["n_classes"])
+            cfg = ProxyFLConfig(
+                alpha=alpha, beta=alpha, n_clients=n_clients, rounds=rounds,
+                batch_size=min(batch_size, client_data[0][0].shape[0]),
+                seed=seed,
+                dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
+            res = run_federated(method, [priv] * n_clients, prox, client_data,
+                                test, cfg, seed=seed, eval_every=rounds)
+            row = res["history"][-1]
+            which = "private_acc" if "private_acc" in row else "acc"
+            accs.extend(row[which])
+            if method in ("proxyfl", "fml"):
+                rows_proxy = row.get("proxy_acc")
+            eps_out = res["epsilon"][0]
+        rows.append({
+            "dataset": dataset, "method": method,
+            "acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
+            "epsilon": eps_out, "rounds": rounds, "clients": n_clients,
+            "dp": dp, "seconds": round(time.time() - t0, 1),
+        })
+        if method in ("proxyfl", "fml") and rows_proxy is not None:
+            rows.append({
+                "dataset": dataset, "method": method + "-proxy",
+                "acc_mean": float(np.mean(rows_proxy)),
+                "acc_std": float(np.std(rows_proxy)),
+                "epsilon": eps_out, "rounds": rounds, "clients": n_clients,
+                "dp": dp, "seconds": 0.0,
+            })
+    return rows

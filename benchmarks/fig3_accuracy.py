@@ -1,0 +1,25 @@
+"""Paper Fig. 3 (+ Fig. 9 macro-accuracy): test accuracy of all methods on
+the three benchmark datasets under DP training, 8 clients, non-IID skew.
+Synthetic class-conditional stand-ins replace MNIST/FaMNIST/CIFAR-10
+offline; the claim validated is the ORDERING:
+ProxyFL-private ≥ FML-private > decentralized singles ≥ centralized
+singles ≥ Regular, with Joint as the upper bound."""
+from __future__ import annotations
+
+from .common import FULL, bench_methods
+
+METHODS = ("proxyfl", "fml", "avgpush", "fedavg", "cwt", "regular", "joint")
+
+
+def run(full: bool = FULL):
+    rows = []
+    datasets = ("mnist", "famnist", "cifar10") if full else ("mnist", "cifar10")
+    for ds in datasets:
+        rows += bench_methods(
+            ds, METHODS,
+            n_clients=8 if full else 4,
+            rounds=30 if full else 3,
+            seeds=range(5) if full else (0,),
+            n_train_factor=1.0 if full else 0.4,
+        )
+    return rows

@@ -1,0 +1,51 @@
+"""Paper Fig. 4 / Fig. 13: communication time per round as the federation
+grows. Centralized schemes (FedAvg, FML) serialize at the server → O(K);
+decentralized PushSum sends exactly one model per client → O(1). We report
+the analytic link model (bytes / 50 GB/s ICI-class links) over the REAL
+serialized sizes of the models used in the paper reproduction, plus the
+LLM-scale proxies used in the multi-pod path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.registry import proxy_of
+from repro.core.gossip import comm_cost_per_round
+from repro.core.protocol import ModelSpec
+from repro.nn.modules import tree_bytes
+from repro.nn.vision import get_vision_model
+
+from .common import FULL
+
+METHODS = ("proxyfl", "fml", "avgpush", "fedavg", "cwt")
+
+
+def run(full: bool = FULL):
+    rows = []
+    # paper-scale: LeNet5 private / MLP proxy on MNIST geometry
+    vm_priv = get_vision_model("lenet5")
+    vm_prox = get_vision_model("mlp")
+    pb = tree_bytes(vm_priv.init(jax.random.PRNGKey(0), (28, 28, 1), 10))
+    xb = tree_bytes(vm_prox.init(jax.random.PRNGKey(0), (28, 28, 1), 10))
+    for K in (4, 8, 16, 32, 64, 128) if full else (4, 8, 32, 128):
+        for m in METHODS:
+            rows.append({
+                "scale": "paper(lenet5/mlp)", "clients": K, "method": m,
+                "model_bytes": pb, "proxy_bytes": xb,
+                "comm_s_per_round": comm_cost_per_round(m, K, pb, xb),
+            })
+    # LLM-scale: the common proxy of the assigned archs (what actually
+    # crosses the wire in the multi-pod ProxyFL deployment)
+    cfg = get_config("qwen2-7b")
+    proxy = proxy_of(cfg)
+    priv_b = cfg.param_counts()["total"] * 2        # bf16
+    prox_b = proxy.param_counts()["total"] * 2
+    for K in (8, 64, 512):
+        for m in METHODS:
+            rows.append({
+                "scale": "llm(qwen2-7b/proxy)", "clients": K, "method": m,
+                "model_bytes": priv_b, "proxy_bytes": prox_b,
+                "comm_s_per_round": comm_cost_per_round(m, K, priv_b, prox_b),
+            })
+    return rows

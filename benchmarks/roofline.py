@@ -1,0 +1,84 @@
+"""Roofline report: reads the dry-run JSON artifacts written by
+``repro.launch.dryrun`` and renders the §Roofline table (three terms per
+arch × shape × mesh, dominant bottleneck, MODEL_FLOPS/HLO ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_rows(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(full: bool = False) -> List[Dict]:
+    out = []
+    for r in load_rows():
+        if r.get("status") == "skipped":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "tag": r.get("tag", ""),
+                        "status": "skipped", "reason": r.get("reason", "")})
+            continue
+        if r.get("status") != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "tag": r.get("tag", ""),
+                        "status": "FAILED", "reason": r.get("error", "")[:80]})
+            continue
+        rl = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        hbm = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0)
+               - ma.get("alias_size_in_bytes", 0))  # donated args update in place
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "tag": r.get("tag", ""), "status": "ok",
+            "program": r["program"],
+            "compute_ms": round(rl["compute_s"] * 1e3, 2),
+            "memory_ms": round(rl["memory_s"] * 1e3, 2),
+            "collective_ms": round(rl["collective_s"] * 1e3, 2),
+            "dominant": rl["dominant"],
+            "hbm_gib_per_dev": round(hbm / 2**30, 2),
+            "fits_16g": hbm < 16 * 2**30,
+            "model_flops": f"{r['model_flops']:.3e}",
+            "useful_ratio": round(r["useful_flops_ratio"] or 0, 3),
+            "modes": str(r.get("sharding_modes")),
+        })
+    return out
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    hdr = ("| arch | shape | mesh | tag | compute ms | memory ms | "
+           "collective ms | dominant | HBM GiB/dev | fits | useful ratio |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"], r["tag"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} "
+            f"| {r['compute_ms']} | {r['memory_ms']} | {r['collective_ms']} "
+            f"| {r['dominant']} | {r['hbm_gib_per_dev']} "
+            f"| {'yes' if r['fits_16g'] else 'NO'} | {r['useful_ratio']} |")
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    if skipped:
+        lines.append("")
+        lines.append("Skipped (per DESIGN.md long-context rules): "
+                     + ", ".join(f"{r['arch']}×{r['shape']}×{r['mesh']}"
+                                 for r in skipped))
+    failed = [r for r in rows if r.get("status") == "FAILED"]
+    if failed:
+        lines.append("")
+        lines.append("FAILED: " + ", ".join(
+            f"{r['arch']}×{r['shape']}×{r['mesh']}: {r['reason']}" for r in failed))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

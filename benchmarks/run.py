@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure. Prints CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # CPU-budget settings
+    REPRO_BENCH_FULL=1 python -m benchmarks.run        # paper-scale settings
+    PYTHONPATH=src python -m benchmarks.run --only fig4_comm,fig11_batchsize
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+import time
+
+from . import (fig3_accuracy, fig4_comm, fig5_ablations, fig6_kvasir,
+               fig11_batchsize, mia_privacy, roofline, table2_histo)
+
+MODULES = {
+    "fig3_accuracy": fig3_accuracy,    # Fig. 3 / Fig. 9
+    "fig4_comm": fig4_comm,            # Fig. 4 / Fig. 13
+    "fig5_ablations": fig5_ablations,  # Fig. 5 a-c / Fig. 12
+    "fig6_kvasir": fig6_kvasir,        # Fig. 6
+    "table2_histo": table2_histo,      # Fig. 8 / Table 2
+    "fig11_batchsize": fig11_batchsize,  # Fig. 11
+    "mia_privacy": mia_privacy,        # beyond-paper: empirical DP check
+    "roofline": roofline,              # §Roofline (reads dry-run artifacts)
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark names")
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    args = ap.parse_args(argv)
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(MODULES)
+
+    failures = 0
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            rows = mod.run(args.full) if args.full else mod.run()
+        except Exception as e:
+            print(f"BENCH FAILED {name}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        if not rows:
+            print("(no rows)")
+            continue
+        keys = sorted({k for r in rows for k in r})
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+        print(buf.getvalue().rstrip())
+        print(f"[{name}: {len(rows)} rows in {time.time()-t0:.1f}s]")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

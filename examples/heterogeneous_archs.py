@@ -1,0 +1,54 @@
+"""Model heterogeneity (paper Fig. 5b): each client keeps a DIFFERENT
+private architecture — MLP, LeNet5, CNN1, CNN2 — while agreeing only on the
+small shared proxy. Canonical FL (FedAvg et al.) cannot do this at all.
+
+    PYTHONPATH=src python examples/heterogeneous_archs.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import run_federated
+from repro.core.protocol import ModelSpec
+from repro.data.partition import partition_major
+from repro.data.synthetic import make_classification_data
+from repro.nn.vision import get_vision_model
+
+N_CLASSES, IMG = 10, (14, 14, 1)
+ARCHS = ("mlp", "lenet5", "cnn1", "cnn2")
+K = len(ARCHS)
+
+key = jax.random.PRNGKey(0)
+x, y = make_classification_data(key, 4000, IMG, N_CLASSES, sep=2.0)
+xt, yt = make_classification_data(jax.random.fold_in(key, 1), 1000, IMG,
+                                  N_CLASSES, sep=2.0)
+parts = partition_major(np.random.default_rng(0), np.asarray(y), K, 500,
+                        0.8, N_CLASSES)
+client_data = [(x[i], y[i]) for i in parts]
+
+specs = []
+for name in ARCHS:
+    vm = get_vision_model(name)
+    specs.append(ModelSpec(name, lambda k, vm=vm: vm.init(k, IMG, N_CLASSES),
+                           vm.apply))
+proxy_vm = get_vision_model("mlp")
+proxy = ModelSpec("proxy-mlp", lambda k: proxy_vm.init(k, IMG, N_CLASSES),
+                  proxy_vm.apply)
+
+cfg = ProxyFLConfig(n_clients=K, rounds=5, batch_size=100,
+                    dp=DPConfig(enabled=True))
+
+fed = run_federated("proxyfl", specs, proxy, client_data, (xt, yt), cfg,
+                    eval_every=cfg.rounds)
+solo = {}
+for k, name in enumerate(ARCHS):
+    r = run_federated("regular", [specs[k]] * K, specs[k], client_data,
+                      (xt, yt), cfg, eval_every=cfg.rounds)
+    solo[name] = float(np.mean(r["history"][-1]["acc"]))
+
+print(f"{'client arch':12s} {'regular':>8s} {'proxyfl':>8s}")
+row = fed["history"][-1]
+for k, name in enumerate(ARCHS):
+    print(f"{name:12s} {solo[name]:8.3f} {row['private_acc'][k]:8.3f}")
+print("\nEvery architecture improves by collaborating through the shared "
+      "proxy — weaker models gain the most (paper Fig. 5b).")

@@ -1,0 +1,30 @@
+"""End-to-end driver: ProxyFL over ~100M-parameter language models.
+
+Each client's private model is the ``repro-100m`` dense decoder (12L/768d,
+~100M params); the shared proxy is a 4L/256d decoder. Clients hold
+synthetic bigram-domain corpora (non-IID by construction); per round each
+runs local DML steps (private Adam + proxy DP-SGD), then the proxies
+travel the PushSum exponential graph.
+
+Defaults are sized for a CPU demonstration run. For the full-scale
+"few hundred steps" run used in EXPERIMENTS.md:
+
+    PYTHONPATH=src python examples/llm_proxyfl.py -- \
+        --rounds 20 --steps-per-round 10 --batch 8 --seq 256
+
+(Anything after ``--`` is forwarded to repro.launch.train.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--" in args:
+        args = args[args.index("--") + 1:]
+    if not args:
+        args = ["--preset", "100m", "--clients", "2", "--rounds", "2",
+                "--steps-per-round", "3", "--batch", "4", "--seq", "128"]
+    raise SystemExit(main(["--preset", "100m"] + args
+                          if "--preset" not in args and "--arch" not in args
+                          else args))

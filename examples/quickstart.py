@@ -1,0 +1,50 @@
+"""Quickstart: ProxyFL in ~40 lines.
+
+Four hospitals (clients), each with a skewed private dataset, jointly train
+without sharing data or private models. Each client trains its private
+model + a DP-SGD proxy (deep mutual learning), then exchanges ONLY the
+proxy over the decentralized PushSum graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import final_mean_acc, run_federated
+from repro.core.protocol import ModelSpec
+from repro.data.partition import partition_major
+from repro.data.synthetic import make_classification_data
+from repro.nn.vision import get_vision_model
+
+N_CLIENTS, N_CLASSES, IMG = 4, 10, (14, 14, 1)
+
+# --- synthetic non-IID federation -----------------------------------------
+key = jax.random.PRNGKey(0)
+x, y = make_classification_data(key, 4000, IMG, N_CLASSES, sep=2.0)
+xt, yt = make_classification_data(jax.random.fold_in(key, 1), 1000, IMG,
+                                  N_CLASSES, sep=2.0)
+parts = partition_major(np.random.default_rng(0), np.asarray(y), N_CLIENTS,
+                        per_client=500, p_major=0.8, n_classes=N_CLASSES)
+client_data = [(x[i], y[i]) for i in parts]
+
+# --- models: any private architecture; a common (small) proxy -------------
+mlp = get_vision_model("mlp")
+spec = ModelSpec("mlp", lambda k: mlp.init(k, IMG, N_CLASSES), mlp.apply)
+
+cfg = ProxyFLConfig(
+    n_clients=N_CLIENTS, rounds=5, batch_size=100, alpha=0.5, beta=0.5,
+    dp=DPConfig(enabled=True, clip_norm=1.0, noise_multiplier=1.0),
+    topology="exponential",
+)
+
+print("method      test-acc   epsilon")
+for method in ("proxyfl", "regular", "joint"):
+    res = run_federated(method, [spec] * N_CLIENTS, spec, client_data,
+                        (xt, yt), cfg, eval_every=cfg.rounds)
+    eps = res["epsilon"][0]
+    print(f"{method:11s} {final_mean_acc(res):8.3f}   "
+          f"{eps if eps is None else round(eps, 2)}")
+print("\nProxyFL's private models should clearly beat isolated Regular "
+      "training, approaching the pooled-data Joint upper bound — with a "
+      "quantified (eps, delta) guarantee on everything that left a client.")

@@ -1,0 +1,15 @@
+"""Batched serving of a client's private model after federation — prefill a
+batch of prompts, then step the decode loop (greedy) through the KV cache.
+Uses the reduced gemma3-4b family variant (5:1 sliding-window) on CPU.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "gemma3-4b", "--smoke", "--batch", "4",
+                            "--prompt-len", "32", "--gen", "8",
+                            "--temperature", "0.8"]
+    raise SystemExit(main(args))

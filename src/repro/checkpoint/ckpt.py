@@ -1,0 +1,68 @@
+"""Checkpointing: params/optimizer pytrees <-> .npz + path manifest.
+
+Leaves are stored under '/'-joined key paths so checkpoints are inspectable
+with plain numpy and stable across JAX versions. Round-level federation
+state (client models, de-bias weights, accountant counters) serializes the
+same way.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype.kind not in "fiub" or str(a.dtype) == "bfloat16":
+            # npz has no bf16/fp8 codecs; store widened (lossless into f32)
+            a = a.astype(np.float32)
+        arrays[k] = a
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    manifest = {k: {"shape": list(np.shape(v)), "dtype": str(np.asarray(v).dtype)}
+                for k, v in flat.items()}
+    with open((path[:-4] if path.endswith(".npz") else path) + ".json", "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+def load_checkpoint(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (leaf order by key paths)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(flat_like.keys())
+    assert len(keys) == len(leaves)
+    restored = []
+    for key, leaf in zip(keys, leaves):
+        arr = npz[key]
+        assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
+        dt = leaf.dtype if hasattr(leaf, "dtype") else None
+        restored.append(jnp.asarray(arr).astype(dt) if dt is not None
+                        else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, restored)

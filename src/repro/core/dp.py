@@ -1,0 +1,223 @@
+"""DP-SGD (Abadi et al. 2016) — paper Eq. (7).
+
+Per-example gradients are computed with an O(1)-memory ``lax.scan`` over the
+batch (TPU adaptation: GPU DP-SGD implementations vmap the whole batch,
+which multiplies gradient memory by B; sequentializing keeps the same FLOPs
+with one live gradient pytree). Each per-example gradient is clipped to L2
+norm C, the clipped gradients are summed, and Gaussian noise N(0, σ²C²) is
+added once to the sum before dividing by B — exactly Eq. (7).
+
+``microbatch`` > 1 trades memory for speed by treating groups of examples
+as one DP unit (sensitivity then covers the group — guarantee becomes
+per-group; keep 1 for per-example guarantees).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(tree)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+    scale = 1.0 / jnp.maximum(1.0, norm / max_norm)
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def add_gaussian_noise(tree: Params, key, stddev: float) -> Params:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (x.astype(jnp.float32) + stddev * jax.random.normal(k, x.shape, jnp.float32)).astype(x.dtype)
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def dp_gradient(
+    loss_fn: Callable[[Params, Any], jnp.ndarray],
+    params: Params,
+    batch: Any,  # pytree whose leaves have leading batch dim B
+    key,
+    *,
+    clip_norm: float,
+    noise_multiplier: float,
+    microbatch: int = 1,
+    vectorized: bool = False,
+) -> Tuple[Params, dict]:
+    """Noisy clipped mean gradient per Eq. (7). Returns (grad, metrics).
+
+    ``vectorized=True`` vmaps the per-example gradients (O(B) gradient
+    memory — fine for the paper's CNN-scale models, much faster); the
+    default scan path is O(1) in B and is what the LLM-scale path uses."""
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    assert B % microbatch == 0, (B, microbatch)
+    n_units = B // microbatch
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    if vectorized:
+        units = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_units, microbatch) + x.shape[1:]), batch)
+        losses, grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, units)
+        norms = jax.vmap(lambda g: jnp.sqrt(sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(g))))(grads)
+        scales = 1.0 / jnp.maximum(1.0, norms / clip_norm)
+        acc = jax.tree_util.tree_map(
+            lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), scales), grads)
+        noisy = add_gaussian_noise(acc, key, noise_multiplier * clip_norm)
+        grad = jax.tree_util.tree_map(lambda x: x / n_units, noisy)
+        return grad, {"loss": jnp.mean(losses), "mean_grad_norm": jnp.mean(norms)}
+
+    def unit(i):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i * microbatch, microbatch, 0),
+            batch,
+        )
+
+    def body(carry, i):
+        acc, loss_sum, norm_sum = carry
+        loss, g = grad_fn(params, unit(i))
+        g_clip, norm = clip_by_global_norm(g, clip_norm)
+        acc = jax.tree_util.tree_map(
+            lambda a, x: a + x.astype(jnp.float32), acc, g_clip)
+        return (acc, loss_sum + loss, norm_sum + norm), None
+
+    zero = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    (acc, loss_sum, norm_sum), _ = jax.lax.scan(
+        body, (zero, jnp.zeros(()), jnp.zeros(())), jnp.arange(n_units))
+
+    noisy = add_gaussian_noise(acc, key, noise_multiplier * clip_norm)
+    grad = jax.tree_util.tree_map(lambda x: x / n_units, noisy)
+    metrics = {
+        "loss": loss_sum / n_units,
+        "mean_grad_norm": norm_sum / n_units,
+    }
+    return grad, metrics
+
+
+def dp_gradient_chunked(
+    loss_fn: Callable[[Params, Any], jnp.ndarray],
+    params: Params,
+    batch: Any,
+    key,
+    *,
+    clip_norm: float,
+    noise_multiplier: float,
+    chunk: int = 8,
+    constrain: Callable[[Any], Any] = lambda b: b,
+    prepare_chunk: Callable[[Any], Any] = lambda b: b,
+    spmd_axis_name=None,
+) -> Tuple[Params, dict]:
+    """Per-example DP-SGD gradient (Eq. 7) with a scan-of-vmap schedule:
+    scan over B/chunk chunks, vmap the per-example grads inside each chunk.
+    Identical semantics to ``dp_gradient`` (every example clipped
+    individually); ``chunk`` trades peak gradient memory (chunk × |θ|)
+    against scan trip count — the knob the §Perf loop tunes on TPU.
+
+    ``prepare_chunk`` runs ONCE per chunk, outside the per-example vmap —
+    the ProxyFL step uses it to compute the (θ-independent) private-peer
+    logits with one batched forward instead of once per example, which on
+    a mesh removes per-example traversals of the large private model.
+    ``spmd_axis_name`` shards the vmapped example dim over that mesh axis
+    (GSPMD would otherwise be free to replicate the per-example compute)."""
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    assert B % chunk == 0, (B, chunk)
+    n_chunks = B // chunk
+    grad_fn = jax.value_and_grad(lambda p, ex: loss_fn(
+        p, jax.tree_util.tree_map(lambda x: x[None], ex)))
+
+    def per_chunk(i):
+        # ``constrain`` pins the chunk dim to the "data" mesh axis on the
+        # distributed path so the vmapped per-example grads divide across
+        # data rows instead of being computed redundantly on every device.
+        return prepare_chunk(constrain(jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, 0), batch)))
+
+    def body(carry, i):
+        acc, loss_sum, norm_sum = carry
+        losses, grads = jax.vmap(grad_fn, in_axes=(None, 0),
+                                 spmd_axis_name=spmd_axis_name)(params, per_chunk(i))
+        norms = jax.vmap(lambda g: jnp.sqrt(sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(g))),
+                         spmd_axis_name=spmd_axis_name)(grads)
+        scales = (1.0 / jnp.maximum(1.0, norms / clip_norm)).astype(jnp.float32)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.einsum(
+                "b...,b->...", g.astype(jnp.float32), scales), acc, grads)
+        return (acc, loss_sum + jnp.sum(losses), norm_sum + jnp.sum(norms)), None
+
+    zero = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    (acc, loss_sum, norm_sum), _ = jax.lax.scan(
+        body, (zero, jnp.zeros(()), jnp.zeros(())), jnp.arange(n_chunks))
+    noisy = add_gaussian_noise(acc, key, noise_multiplier * clip_norm)
+    grad = jax.tree_util.tree_map(lambda x: x / B, noisy)
+    return grad, {"loss": loss_sum / B, "mean_grad_norm": norm_sum / B}
+
+
+def dp_gradient_poisson(
+    loss_fn: Callable[[Params, Any], jnp.ndarray],
+    params: Params,
+    batch: Any,          # padded batch (leaves [max_B, ...])
+    mask: jnp.ndarray,   # [max_B] 1.0 = real example, 0.0 = padding
+    key,
+    *,
+    clip_norm: float,
+    noise_multiplier: float,
+    expected_batch: float,
+) -> Tuple[Params, dict]:
+    """Eq. (7) under EXACT Poisson subsampling (Yu et al. 2019): clipped
+    per-example gradients of the masked examples are summed, Gaussian noise
+    N(0, sigma^2 C^2) added once, and the sum divided by the EXPECTED batch
+    size qN — the estimator whose sensitivity the sampled-Gaussian RDP
+    accountant analyzes. Padding slots contribute exactly zero."""
+    grad_fn = jax.value_and_grad(lambda p, ex: loss_fn(
+        p, jax.tree_util.tree_map(lambda x: x[None], ex)))
+    losses, grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batch)
+    norms = jax.vmap(lambda g: jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(g))))(grads)
+    scales = mask / jnp.maximum(1.0, norms / clip_norm)
+    acc = jax.tree_util.tree_map(
+        lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), scales),
+        grads)
+    noisy = add_gaussian_noise(acc, key, noise_multiplier * clip_norm)
+    grad = jax.tree_util.tree_map(lambda x: x / expected_batch, noisy)
+    n_real = jnp.maximum(jnp.sum(mask), 1.0)
+    return grad, {"loss": jnp.sum(losses * mask) / n_real,
+                  "mean_grad_norm": jnp.sum(norms * mask) / n_real}
+
+
+def non_dp_gradient(
+    loss_fn: Callable[[Params, Any], jnp.ndarray],
+    params: Params,
+    batch: Any,
+    *,
+    accum: int = 1,
+) -> Tuple[Params, dict]:
+    """Plain mean gradient, optionally accumulated over ``accum`` microbatch
+    slices with a scan (bounds peak logits memory for large-vocab models)."""
+    if accum <= 1:
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        return g, {"loss": loss}
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    assert B % accum == 0, (B, accum)
+    mb = B // accum
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def body(carry, i):
+        acc, loss_sum = carry
+        sl = jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0), batch)
+        loss, g = grad_fn(params, sl)
+        acc = jax.tree_util.tree_map(lambda a, x: a + x.astype(jnp.float32) / accum, acc, g)
+        return (acc, loss_sum + loss / accum), None
+
+    zero = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    (g, loss), _ = jax.lax.scan(body, (zero, jnp.zeros(())), jnp.arange(accum))
+    return g, {"loss": loss}

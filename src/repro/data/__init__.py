@@ -1,0 +1,13 @@
+from .loader import sample_batch, steps_per_epoch
+from .partition import partition_dirichlet, partition_major
+from .synthetic import lm_examples, make_classification_data, make_lm_data
+
+__all__ = [
+    "sample_batch",
+    "steps_per_epoch",
+    "partition_dirichlet",
+    "partition_major",
+    "lm_examples",
+    "make_classification_data",
+    "make_lm_data",
+]

@@ -1,0 +1,59 @@
+"""Batching for DP-SGD.
+
+The RDP accountant for the SAMPLED Gaussian mechanism formally assumes
+POISSON subsampling: each example enters the batch independently with
+probability q = B/N (paper §4.1, citing Yu et al. 2019: "mini-batches are
+sampled from the training set independently with replacement by including
+each training example with a fixed probability").
+
+Two loaders are provided:
+
+* :func:`sample_batch` — fixed-size uniform sampling with replacement, the
+  standard practical surrogate (Abadi et al. 2016 §5); keeps jit shapes
+  static.
+* :func:`poisson_batch` — exact Poisson subsampling. The variable batch
+  size is padded/truncated to a static ``max_batch`` with a weight mask so
+  the jitted step keeps one shape: selected examples get weight 1, padding
+  gets 0, and the DP-SGD mean divides by the EXPECTED batch size qN (the
+  estimator the accountant's sensitivity analysis assumes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_batch(key, x: jnp.ndarray, y: jnp.ndarray, batch: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    idx = jax.random.randint(key, (batch,), 0, x.shape[0])
+    return x[idx], y[idx]
+
+
+def poisson_batch(key, x: jnp.ndarray, y: jnp.ndarray, q: float,
+                  max_batch: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Poisson-subsampled batch, padded to ``max_batch``.
+
+    Returns (xb, yb, mask) where mask[i] in {0., 1.} marks real examples.
+    Selected examples beyond ``max_batch`` are dropped (prob. negligible
+    when max_batch ≳ qN + 4·sqrt(qN(1-q))); unselected slots repeat example
+    0 with mask 0, so downstream per-example clipping sees zero gradients
+    there (clip(0) = 0 contributes nothing to the sum).
+    """
+    n = x.shape[0]
+    sel = jax.random.bernoulli(key, q, (n,))
+    # stable order: selected indices first
+    order = jnp.argsort(~sel)  # False<True; selected (True) first under ~
+    take = order[:max_batch]
+    mask = sel[take].astype(jnp.float32)
+    return x[take], y[take], mask
+
+
+def expected_batch(q: float, n: int) -> float:
+    return q * n
+
+
+def steps_per_epoch(n: int, batch: int) -> int:
+    return max(1, -(-n // batch))

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the compute hot spots, each validated in
+interpret mode against a pure-jnp oracle in ``ref.py``:
+
+- ``flash_attention`` — causal/sliding-window attention (prefill hot spot)
+- ``mamba_scan``      — chunked selective scan (SSM/hybrid archs)
+- ``dp_clip``         — fused per-example clip+accumulate (DP-SGD, Eq. 7)
+"""
+from . import ref
+from .ops import (
+    clip_accumulate,
+    flash_attention,
+    gqa_flash_attention,
+    mamba_scan,
+    scale_accumulate,
+    sumsq,
+    tree_clip_accumulate,
+)
+
+__all__ = [
+    "ref",
+    "clip_accumulate",
+    "flash_attention",
+    "gqa_flash_attention",
+    "mamba_scan",
+    "scale_accumulate",
+    "sumsq",
+    "tree_clip_accumulate",
+]

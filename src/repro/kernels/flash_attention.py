@@ -1,0 +1,121 @@
+"""Pallas TPU flash-attention kernel (causal, optional sliding window).
+
+Targets the MXU with explicit VMEM tiling: the grid is
+``(batch*heads, q_blocks, kv_blocks)`` with the KV dimension innermost
+(sequential on TPU), carrying the online-softmax state (m, l, acc) in VMEM
+scratch across KV blocks. Block shapes should keep the contraction dims at
+multiples of 128 for MXU alignment.
+
+Validated against ``ref.flash_attention_ref`` in interpret mode (this
+container has no TPU); the pure-JAX chunked equivalent used by the model
+stack lives in ``repro.nn.attention.attend``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int,
+                  seq_len: int, window: Optional[int], causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)  # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = k_pos < seq_len  # padding
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(ok, jnp.exp(s - m_safe[:, None]), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    v = v_ref[0].astype(jnp.float32)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, S, D]
+    k: jnp.ndarray,  # [B, H, S, D]  (kv heads pre-broadcast for GQA)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    scale = float(scale if scale is not None else D ** -0.5)
+    bq, bk = min(block_q, S), min(block_k, S)
+    n_q = -(-S // bq)
+    n_k = -(-S // bk)
+    Sq_pad, Sk_pad = n_q * bq, n_k * bk
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+    if Sq_pad != S:
+        qf = jnp.pad(qf, ((0, 0), (0, Sq_pad - S), (0, 0)))
+    if Sk_pad != S:
+        kf = jnp.pad(kf, ((0, 0), (0, Sk_pad - S), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, Sk_pad - S), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=bq, block_k=bk,
+        seq_len=S, window=window, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :S].reshape(B, H, S, D)

@@ -1,0 +1,53 @@
+"""Jitted public wrappers around the Pallas kernels, with GQA head
+broadcasting and pytree-level DP clipping built on the flat kernels."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
+from .dp_clip import clip_accumulate, scale_accumulate, sumsq
+from .flash_attention import flash_attention
+from .mamba_scan import mamba_scan
+from .rmsnorm import rmsnorm
+
+
+def gqa_flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                        block_q=128, block_k=128, interpret=True):
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] (model-stack layout).
+    Broadcasts KV heads for grouped queries and calls the Pallas kernel."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    args = [t.transpose(0, 2, 1, 3) for t in (q, k, v)]  # -> [B, H, S, D]
+    out = flash_attention(*args, causal=causal, window=window, scale=scale,
+                          block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def tree_clip_accumulate(acc_tree, grad_tree, clip_norm: float, *,
+                         interpret=True):
+    """Eq. (7) clip+accumulate on whole parameter pytrees via the fused
+    flat kernels (norm over ALL leaves jointly, as DP-SGD requires)."""
+    flat_g = tree_flatten_vector(grad_tree)
+    flat_a = tree_flatten_vector(acc_tree).astype(jnp.float32)
+    out = clip_accumulate(flat_a, flat_g, float(clip_norm), interpret=interpret)
+    return tree_unflatten_vector(out, acc_tree)
+
+
+__all__ = [
+    "flash_attention",
+    "gqa_flash_attention",
+    "mamba_scan",
+    "rmsnorm",
+    "sumsq",
+    "scale_accumulate",
+    "clip_accumulate",
+    "tree_clip_accumulate",
+]

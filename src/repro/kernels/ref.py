@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references the
+kernel sweeps assert against)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Naive materialized-scores attention. q/k/v: [B, H, S, D]."""
+    B, H, S, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(dt, x, B_in, C_in, A) -> jnp.ndarray:
+    """Sequential selective scan. dt/x: [B,S,di]; B/C: [B,S,ds]; A: [di,ds]."""
+    Bsz, S, di = x.shape
+
+    def step(h, t):
+        dt_t, x_t, b_t, c_t = t
+        a = jnp.exp(dt_t[..., None] * A)  # [B, di, ds]
+        h = a * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, di, A.shape[1]), jnp.float32)
+    xs = (dt.swapaxes(0, 1).astype(jnp.float32), x.swapaxes(0, 1).astype(jnp.float32),
+          B_in.swapaxes(0, 1).astype(jnp.float32), C_in.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def sumsq_ref(x) -> jnp.ndarray:
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def scale_accumulate_ref(acc, g, scale) -> jnp.ndarray:
+    return acc + g.astype(jnp.float32) * scale
+
+
+def clip_accumulate_ref(acc, g, clip_norm: float) -> jnp.ndarray:
+    norm = jnp.sqrt(sumsq_ref(g))
+    return acc + g.astype(jnp.float32) / jnp.maximum(1.0, norm / clip_norm)
+
+
+def rmsnorm_ref(x, g, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,55 @@
+"""Pallas TPU fused RMSNorm kernel.
+
+RMSNorm is applied 2×/layer × every token — at train_4k that is ~0.5 TB of
+HBM traffic per step if the mean-square reduction, rsqrt and scale run as
+separate XLA ops. The fused kernel streams each [block_rows, d] tile
+HBM→VMEM once, does the f32 reduction + normalize + gain on the VPU, and
+writes the tile back once.
+
+Tiling: rows (flattened batch×seq) × full d_model. d_model of the assigned
+archs is ≤ 8192 (32 KiB/row in f32), so a [rows_block, d] tile with
+rows_block=256 sits comfortably in the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """Fused RMSNorm. x: [..., d]; g: [d]. Returns x.dtype."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    b = min(block_rows, max(rows, 1))
+    n_blocks = -(-rows // b)
+    pad = n_blocks * b - rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((b, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * b, d), x.dtype),
+        interpret=interpret,
+    )(xf, g)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

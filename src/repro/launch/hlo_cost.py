@@ -1,0 +1,293 @@
+"""Cost models for the dry-run roofline.
+
+Two complementary sources:
+
+1. **Jaxpr walker** (:func:`jaxpr_cost`) — XLA's ``cost_analysis()`` counts
+   every ``while`` body ONCE, so any scan-based program (our layer stacks,
+   microbatch accumulation, DP per-example loop, KV-chunked attention) is
+   undercounted by the trip count. We therefore walk the traced jaxpr where
+   every ``scan`` carries its static ``length`` and multiply body costs
+   through. FLOPs are exact for dot/conv (2·M·N·K) and approximate
+   (1 flop/element) for elementwise ops. Memory traffic uses a
+   fused-elementwise model: only "major" ops (dot, conv, gather/scatter,
+   dynamic slices, reduces, RNG) are charged HBM reads/writes — chains of
+   elementwise ops are assumed fused by XLA and never hit HBM.
+   Costs are GLOBAL (logical shapes); divide by chip count for per-device
+   numbers under the perfect-SPMD assumption.
+
+2. **HLO collective parser** (:func:`collective_wire_bytes`) — the
+   post-SPMD-partitioning HLO is the per-device program; every collective
+   op line carries its (per-device) result shape and replica groups. We
+   convert those to per-device *wire* bytes with the standard ring-algorithm
+   factors, which is what the ICI roofline term wants.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+# ---------------------------------------------------------------------------
+# jaxpr cost walker
+
+_MAJOR_MEM_PRIMS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "scatter_add", "dynamic_slice", "dynamic_update_slice", "reduce_sum",
+    "reduce_max", "reduce_min", "reduce_prod", "reduce_and", "reduce_or",
+    "argmax", "argmin", "sort", "random_bits", "cumsum", "cumlogsumexp",
+    "cummax", "top_k",
+}
+
+_CALL_PRIMS = {
+    "pjit", "closed_call", "core_call", "remat", "remat2", "checkpoint",
+    "custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
+    "custom_vjp_call_jaxpr", "shard_map", "custom_partitioning",
+}
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize if aval.shape else aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _aval_size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    m = 1
+    for i, d in enumerate(lhs.shape):
+        if i not in lc and i not in lb:
+            m *= d
+    n = 1
+    for i, d in enumerate(rhs.shape):
+        if i not in rc and i not in rb:
+            n *= d
+    k = 1
+    for i in lc:
+        k *= lhs.shape[i]
+    b = 1
+    for i in lb:
+        b *= lhs.shape[i]
+    return 2.0 * b * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_elems * (kernel spatial * in_channels)
+    dnums = eqn.params["dimension_numbers"]
+    k_spatial = 1
+    for i in dnums.rhs_spec[2:]:
+        k_spatial *= rhs.shape[i]
+    cin = rhs.shape[dnums.rhs_spec[1]]
+    return 2.0 * _aval_size(out) * k_spatial * cin
+
+
+def _sub_jaxprs(eqn):
+    """(jaxpr, multiplier) pairs for call-like primitives."""
+    p = eqn.params
+    name = eqn.primitive.name
+    if name == "scan":
+        return [(p["jaxpr"], int(p["length"]))]
+    if name == "while":
+        subs = []
+        if "body_jaxpr" in p:
+            subs.append((p["body_jaxpr"], 1))
+        if "cond_jaxpr" in p:
+            subs.append((p["cond_jaxpr"], 1))
+        return subs
+    if name == "cond":
+        return [(b, 1) for b in p.get("branches", ())][:1] or []
+    for k in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if k in p:
+            return [(p[k], 1)]
+    return []
+
+
+def jaxpr_cost(jaxpr) -> Dict[str, float]:
+    """{"flops": ..., "bytes": ...} — global, trip-count-corrected."""
+    if hasattr(jaxpr, "jaxpr"):  # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    flops = 0.0
+    mem = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for sub, mult in subs:
+                c = jaxpr_cost(sub)
+                flops += mult * c["flops"]
+                mem += mult * c["bytes"]
+            continue
+        out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        out_n = sum(_aval_size(v.aval) for v in eqn.outvars)
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+        elif name.startswith("reduce") or name in ("cumsum", "argmax", "argmin"):
+            flops += sum(_aval_size(v.aval) for v in eqn.invars)
+        else:
+            flops += out_n  # elementwise approx: 1 flop / output element
+        if name in _MAJOR_MEM_PRIMS:
+            in_b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+            mem += in_b + out_b
+    return {"flops": flops, "bytes": mem}
+
+
+def step_cost(fn, *args) -> Dict[str, float]:
+    """Trace ``fn`` at ShapeDtypeStruct args and return its global cost."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return jaxpr_cost(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+
+_COLL_LINE = re.compile(
+    r"=\s*(?:\()?\s*(pred|s4|s8|s16|s32|s64|u8|u16|u32|u64|f8e4m3fn|f8e5m2|"
+    r"f16|bf16|f32|f64|c64|c128)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8,
+    "s64": 8, "u64": 8, "f64": 8, "c128": 16,
+}
+
+
+def _result_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CONDITION = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|true_computation|false_computation)"
+                    r"=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _wire(kind: str, r: int, g: int) -> float:
+    """Ring-algorithm per-device wire volume for result bytes R, group g:
+      all-reduce:          2·(g−1)/g · R          (reduce-scatter + all-gather)
+      all-gather:          (g−1)/g · R            (R is the gathered result)
+      reduce-scatter:      (g−1) · R              (operand is g× the result)
+      all-to-all:          (g−1)/g · R
+      collective-permute:  R                      (point-to-point)
+    """
+    if g <= 1 and kind != "collective-permute":
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * r
+    if kind == "all-gather":
+        return (g - 1) / g * r
+    if kind == "reduce-scatter":
+        return (g - 1.0) * r
+    if kind == "all-to-all":
+        return (g - 1) / g * r
+    return float(r)  # collective-permute
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device ICI wire bytes by collective kind, from post-SPMD HLO.
+
+    Collectives inside while-loop bodies (our layer-stack / microbatch / DP
+    scans) execute once per iteration, so their bytes are multiplied by the
+    loop's ``known_trip_count`` backend annotation, propagated through the
+    computation call graph from ENTRY.
+    """
+    # pass 1: split into computations; collect collectives and call edges
+    comps: Dict[str, Dict[str, list]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        h = _COMP_HEADER.match(line)
+        if h:
+            cur = h.group(2)
+            comps[cur] = {"colls": [], "calls": []}
+            if h.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        m = _COLL_LINE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            comps[cur]["colls"].append(
+                (kind, _result_bytes(dtype, dims), _group_size(line)))
+        if " while(" in line or "= while(" in line or re.search(r"\bwhile\(", line):
+            t = _TRIP.search(line)
+            n = int(t.group(1)) if t else 1
+            b = _BODY.search(line)
+            c = _CONDITION.search(line)
+            if b:
+                comps[cur]["calls"].append((b.group(1), n))
+            if c:
+                comps[cur]["calls"].append((c.group(1), n + 1))
+        else:
+            for callee in _CALLS.findall(line):
+                comps[cur]["calls"].append((callee, 1))
+            br = _BRANCHES.search(line)
+            if br:
+                for callee in br.group(1).split(","):
+                    comps[cur]["calls"].append((callee.strip().lstrip("%"), 1))
+
+    # pass 2: propagate execution multipliers from ENTRY
+    mult: Dict[str, float] = {}
+    if entry is None:  # fall back: count everything once
+        entry_list = list(comps)
+        for c in entry_list:
+            mult[c] = 1.0
+    else:
+        stack = [(entry, 1.0)]
+        while stack:
+            name, m_ = stack.pop()
+            mult[name] = mult.get(name, 0.0) + m_
+            for callee, n in comps.get(name, {}).get("calls", []):
+                if callee in comps:
+                    stack.append((callee, m_ * n))
+
+    out: Dict[str, float] = {}
+    count: Dict[str, float] = {}
+    for name, data in comps.items():
+        m_ = mult.get(name, 0.0)
+        if not m_:
+            continue
+        for kind, r, g in data["colls"]:
+            out[kind] = out.get(kind, 0.0) + m_ * _wire(kind, r, g)
+            count[kind] = count.get(kind, 0) + m_
+    return {"wire_bytes": out, "op_counts": count,
+            "total_wire_bytes": sum(out.values())}

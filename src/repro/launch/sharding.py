@@ -1,0 +1,266 @@
+"""Sharding rules: parameter, optimizer, cache and batch PartitionSpecs.
+
+Conventions (Megatron + ZeRO, adapted to the ProxyFL client mapping):
+
+* leading CLIENT dim of federation state  -> "pod"  (one client per pod)
+* stacked layer-repeat dim (under stack/) -> never sharded (lax.scan runs
+  over it; sharding it would turn every scan step into a collective)
+* weight output dim                       -> "model"  (column parallel)
+* weight input dim (wo/down/out_proj)     -> "model"  (row parallel)
+* one remaining large dim                 -> "data"   (ZeRO-3 / FSDP)
+* batch dim of activations                -> "data"
+* KV-cache: batch -> "data" (or seq when batch=1), head_dim -> "model"
+
+``expert_parallel=True`` switches stacked expert weights from tensor
+parallelism to expert parallelism (experts over "model") — a perf lever
+explored in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import axis_size
+
+_ROW_PARALLEL = re.compile(r"(wo|down|out_proj|residual/down|shared/down)(/w)?$")
+_EXPERT_STACK = re.compile(r"ffn/(gate|up|down)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _assign(dims, used, size_of, axis_total, *, prefer, min_shard=8):
+    """Pick one dim index from ``dims`` (ordered by ``prefer``) divisible by
+    axis_total with a reasonable shard; returns index or None."""
+    order = sorted(dims, key=prefer)
+    for d in order:
+        if d in used:
+            continue
+        if size_of(d) % axis_total == 0 and size_of(d) // axis_total >= min_shard:
+            return d
+    return None
+
+
+def param_pspec(
+    path_str: str,
+    shape,
+    mesh: Mesh,
+    *,
+    client_stacked: bool = False,
+    expert_parallel: bool = False,
+    fsdp_data: bool = True,
+) -> P:
+    model = axis_size(mesh, "model")
+    data = axis_size(mesh, "data")
+    has_pod = "pod" in mesh.axis_names
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    lo = 0
+    if client_stacked:
+        if has_pod:
+            spec[0] = "pod"
+        lo = 1
+    if "stack/" in path_str or path_str.startswith("stack"):
+        lo += 1  # layer-repeat dim: never sharded
+
+    dims = [d for d in range(lo, ndim)]
+    if not dims:
+        return P(*spec)
+    size_of = lambda d: shape[d]
+    total = 1
+    for d in dims:
+        total *= shape[d]
+    if total < 2 ** 15:  # small tensors: replicate (cheaper than tiny shards)
+        return P(*spec)
+
+    used = set()
+    # Embedding tables: shard the VOCAB dim on "model". The lookup side only
+    # costs a small [tokens, d] all-reduce, while the logits side (tied
+    # embeddings, and every head/w) then produces vocab-sharded logits with
+    # no collective — the loss is written to reduce vocab locally.
+    if path_str.endswith("embed/e"):
+        v_dim = lo if ndim - lo == 2 else lo + 1  # audio tables are [K, V, d]
+        if v_dim < ndim and shape[v_dim] % model == 0:
+            spec[v_dim] = "model"
+            used.add(v_dim)
+    is_expert = bool(_EXPERT_STACK.search(path_str)) and ndim - lo >= 3
+    if expert_parallel and is_expert:
+        e_dim = dims[0]  # expert dim directly after client/stack dims
+        if shape[e_dim] % model == 0:
+            spec[e_dim] = "model"
+            used.add(e_dim)
+    if "model" not in spec:
+        if _ROW_PARALLEL.search(path_str):
+            m = _assign(dims, used, size_of, model, prefer=lambda d: (d != ndim - 2, -shape[d]))
+        else:
+            m = _assign(dims, used, size_of, model, prefer=lambda d: (d != ndim - 1, -shape[d]))
+        if m is not None:
+            spec[m] = "model"
+            used.add(m)
+    if fsdp_data:
+        f = _assign(dims, used, size_of, data, prefer=lambda d: -shape[d], min_shard=4)
+        if f is not None:
+            spec[f] = "data"
+    return P(*spec)
+
+
+def tree_pspecs(tree, mesh: Mesh, *, client_stacked=False, expert_parallel=False,
+                fsdp_data=True):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [
+        param_pspec(_path_str(path), jnp.shape(leaf), mesh,
+                    client_stacked=client_stacked, expert_parallel=expert_parallel,
+                    fsdp_data=fsdp_data)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _n_elems(l) -> int:
+    shape = getattr(l, "shape", ())
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(jnp.dtype(getattr(l, "dtype", jnp.float32)).itemsize) * _n_elems(l)
+        for l in jax.tree_util.tree_leaves(tree))
+
+
+def choose_mode(params_shapes, mesh: Mesh, *, budget_bytes: float = 6e9) -> str:
+    """Pick the parameter/optimizer placement for one model:
+
+    * ``tp``    — tensor parallel only; params AND optimizer replicated over
+                  "data". Zero gather traffic per forward; grads all-reduce
+                  once per step. Best when 3×|θ|/model_axis fits.
+    * ``zero1`` — params replicated over "data" (fast forwards), optimizer
+                  moments sharded over "data" (ZeRO-1). Grads reduce-scatter,
+                  updated params all-gather once per step.
+    * ``zero3`` — params and optimizer sharded over "data" too (ZeRO-3 /
+                  FSDP); weights are gathered per traversal. Only for models
+                  whose replicated copy cannot fit.
+    """
+    model = axis_size(mesh, "model")
+    total = tree_bytes(params_shapes)
+    # optimizer ≈ 2 fp32 moments + fp32 master copy for sub-fp32 params
+    n_elems = sum(_n_elems(l) for l in jax.tree_util.tree_leaves(params_shapes))
+    master = any(jnp.dtype(getattr(l, "dtype", jnp.float32)) != jnp.float32
+                 for l in jax.tree_util.tree_leaves(params_shapes))
+    opt = (12 if master else 8) * n_elems
+    if (total + opt) / model <= budget_bytes:
+        return "tp"
+    if total / model <= budget_bytes:
+        return "zero1"
+    return "zero3"
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+
+def _batch_axes_for(mesh: Mesh, extent: int):
+    """Largest of ("pod","data") / ("data",) that divides ``extent``."""
+    data = axis_size(mesh, "data")
+    pod = axis_size(mesh, "pod") if "pod" in mesh.axis_names else 1
+    if pod > 1 and extent % (pod * data) == 0 and extent >= pod * data:
+        return ("pod", "data")
+    if extent % data == 0 and extent >= data:
+        return "data"
+    return None
+
+
+def cache_pspec(path_str: str, shape, mesh: Mesh, *, seq_shard: bool = True,
+                batch_replicated: bool = False) -> P:
+    model = axis_size(mesh, "model")
+    data = axis_size(mesh, "data")
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    name = path_str.rsplit("/", 1)[-1]
+    # batch/seq placement (batch preferred; batch=1 long-context — or the
+    # 2D weight-stationary decode scheme — shards the KV sequence instead)
+    ba = None if batch_replicated else _batch_axes_for(mesh, shape[0])
+    if ba is not None:
+        spec[0] = ba
+    elif seq_shard and ndim >= 2 and name in ("k", "v", "ckv", "kr"):
+        sa = _batch_axes_for(mesh, shape[1])
+        if sa is not None:
+            spec[1] = sa  # long-context: shard the KV sequence
+    # feature placement
+    if name in ("k", "v"):
+        hd, H = shape[3], shape[2]
+        if hd % model == 0:
+            spec[3] = "model"
+        elif H % model == 0:
+            spec[2] = "model"
+    elif name in ("ckv", "kr"):
+        if shape[2] % model == 0:
+            spec[2] = "model"
+    elif name == "conv":
+        if shape[2] % model == 0:
+            spec[2] = "model"
+    elif name == "ssm":
+        if shape[1] % model == 0:
+            spec[1] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(cache, mesh: Mesh, *, seq_shard: bool = True,
+                 batch_replicated: bool = False):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = [cache_pspec(_path_str(p), jnp.shape(l), mesh, seq_shard=seq_shard,
+                         batch_replicated=batch_replicated)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batches / activations
+
+
+def batch_pspec(shape, mesh: Mesh, *, client_stacked=False) -> P:
+    """Tokens/labels/img arrays: [(K,) B, ...] -> client on pod, batch on
+    ("pod","data") (single-client multi-pod = pure data parallel over pods)
+    or just "data" when clients occupy the pod axis."""
+    data = axis_size(mesh, "data")
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    b = 0
+    if client_stacked:
+        if "pod" in mesh.axis_names:
+            spec[0] = "pod"
+        b = 1
+        axes_for = lambda n: ("data" if n % data == 0 and n >= data else None)
+    else:
+        axes_for = lambda n: _batch_axes_for(mesh, n)
+    if ndim > b and axes_for(shape[b]) is not None:
+        spec[b] = axes_for(shape[b])
+    elif ndim > b + 1 and axes_for(shape[b + 1]) is not None:
+        spec[b + 1] = axes_for(shape[b + 1])  # batch=1 long-context: shard sequence
+    return P(*spec)
+
+
+def batch_pspecs(batch, mesh: Mesh, *, client_stacked=False):
+    return jax.tree_util.tree_map(
+        lambda l: batch_pspec(jnp.shape(l), mesh, client_stacked=client_stacked), batch)
+
+
+def named(tree_of_pspecs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P))

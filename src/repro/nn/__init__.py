@@ -1,0 +1,30 @@
+from .modules import (
+    Params,
+    tree_bytes,
+    tree_flatten_vector,
+    tree_global_norm,
+    tree_size,
+    tree_unflatten_vector,
+)
+from .model import decode_step, forward, init_cache, init_model
+from .losses import accuracy, cross_entropy, dml_loss, kl_divergence, macro_accuracy
+from . import vision
+
+__all__ = [
+    "Params",
+    "tree_bytes",
+    "tree_flatten_vector",
+    "tree_global_norm",
+    "tree_size",
+    "tree_unflatten_vector",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_model",
+    "accuracy",
+    "cross_entropy",
+    "dml_loss",
+    "kl_divergence",
+    "macro_accuracy",
+    "vision",
+]

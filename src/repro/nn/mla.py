@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed to a per-token latent ``c_kv`` (rank ``kv_lora_rank``)
+plus one shared RoPE key head; only ``(c_kv, k_rope)`` is cached. Prefill
+expands per-head K/V from the latent and runs regular flash attention.
+Decode uses the *absorbed* formulation: queries are pushed through W_uk into
+latent space, so attention runs against the compressed cache directly —
+per-step KV traffic is ``kv_lora + rope_dim`` per token instead of
+``2 * H * head_dim`` (the MLA decode advantage, TPU-friendly because it is
+a plain [B,1,H,r]×[B,S,r] contraction on the MXU).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, LayerSpec, MLAConfig
+from .attention import attend
+from .modules import Params, apply_rope, init_linear, init_rmsnorm, linear, rmsnorm
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.mla or MLAConfig()
+    d, H = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    k = jax.random.split(key, 6)
+    return {
+        "wdq": init_linear(k[0], d, m.q_lora_rank, dtype=dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dtype),
+        "wuq": init_linear(k[1], m.q_lora_rank, H * qk_head, dtype=dtype),
+        # joint down-proj: [c_kv | k_rope]
+        "wdkv": init_linear(k[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+        "wuk": init_linear(k[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype=dtype),
+        "wuv": init_linear(k[4], m.kv_lora_rank, H * m.v_head_dim, dtype=dtype),
+        "wo": init_linear(k[5], H * m.v_head_dim, d, dtype=dtype),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32) -> Params:
+    m = cfg.mla or MLAConfig()
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def _project_q(p, cfg: ModelConfig, m: MLAConfig, x, q_pos, theta):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = linear(p["wuq"], rmsnorm(p["q_norm"], linear(p["wdq"], x)))
+    q = q.reshape(B, S, H, qk_head)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, q_pos, theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, m: MLAConfig, x, kv_pos, theta):
+    B, S, _ = x.shape
+    dkv = linear(p["wdkv"], x)
+    ckv = rmsnorm(p["kv_norm"], dkv[..., : m.kv_lora_rank])
+    kr = dkv[..., m.kv_lora_rank :]
+    kr = apply_rope(kr[:, :, None, :], kv_pos, theta)[:, :, 0, :]  # shared head
+    return ckv, kr
+
+
+def _expanded_attend(p, cfg, m, q_nope, q_rope, ckv, kr, q_pos, kv_pos, kv_chunk):
+    """Prefill path: expand per-head K/V from the latent, flash-attend."""
+    B, Sk = ckv.shape[0], ckv.shape[1]
+    H = cfg.n_heads
+    k_nope = linear(p["wuk"], ckv).reshape(B, Sk, H, m.qk_nope_head_dim)
+    vfull = linear(p["wuv"], ckv).reshape(B, Sk, H, m.v_head_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, Sk, H, m.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    return attend(q, k, vfull, q_pos=q_pos, kv_pos=kv_pos, kv_chunk=kv_chunk, scale=scale)
+
+
+def _absorbed_attend(p, cfg, m, q_nope, q_rope, ckv, kr, q_pos, kv_pos, kv_chunk):
+    """Decode path: attention in latent space against the compressed cache."""
+    B, Sq = q_nope.shape[0], q_nope.shape[1]
+    H = cfg.n_heads
+    wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)  # absorb W_uk into q
+    q_cat = jnp.concatenate([q_lat, q_rope], -1)  # [B,Sq,H,r+rope]
+    k_cat = jnp.concatenate([ckv, kr], -1)[:, :, None, :]  # Hkv=1
+    v_lat = ckv[:, :, None, :]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o_lat = attend(q_cat, k_cat, v_lat, q_pos=q_pos, kv_pos=kv_pos, kv_chunk=kv_chunk, scale=scale)
+    wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    return jnp.einsum("bshr,rhd->bshd", o_lat, wuv)
+
+
+def apply_mla(
+    p: Params,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x: jnp.ndarray,
+    *,
+    pos_offset: jnp.ndarray | int = 0,
+    cache: Optional[Params] = None,
+    kv_chunk: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    m = cfg.mla or MLAConfig()
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    theta = spec.rope_theta or cfg.rope_theta
+    q_pos = jnp.asarray(pos_offset, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _project_q(p, cfg, m, x, q_pos, theta)
+    ckv, kr = _project_kv_latent(p, m, x, q_pos, theta)
+
+    if cache is None:
+        out = _expanded_attend(p, cfg, m, q_nope, q_rope, ckv, kr, q_pos, q_pos, kv_chunk)
+        new_cache = None
+    else:
+        off = jnp.asarray(pos_offset, jnp.int32)
+        cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, off, 0))
+        cr = jax.lax.dynamic_update_slice(cache["kr"], kr.astype(cache["kr"].dtype), (0, off, 0))
+        new_cache = {"ckv": cc, "kr": cr}
+        kv_pos = jnp.arange(cc.shape[1], dtype=jnp.int32)
+        if S == 1:
+            out = _absorbed_attend(p, cfg, m, q_nope, q_rope, cc, cr, q_pos, kv_pos, kv_chunk)
+        else:
+            out = _expanded_attend(p, cfg, m, q_nope, q_rope, cc, cr, q_pos, kv_pos, kv_chunk)
+
+    y = linear(p["wo"], out.reshape(B, S, H * m.v_head_dim))
+    return y, new_cache

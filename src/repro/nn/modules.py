@@ -1,0 +1,145 @@
+"""Basic functional building blocks.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every module is
+an ``init_*(key, ...) -> params`` plus an ``apply``-style function. This
+keeps everything transparent to ``jax.jit`` / ``shard_map`` / ``vmap`` and
+lets the ProxyFL protocol treat whole models as flat vectors when gossiping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+# ---------------------------------------------------------------------------
+# Initializers
+
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+
+
+def init_linear(key, d_in, d_out, bias=False, scale=0.02, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    p = {"w": normal_init(kw, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["g"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+
+
+def init_embedding(key, vocab, d, scale=0.02, dtype=jnp.float32):
+    return {"e": normal_init(key, (vocab, d), scale, dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["e"], ids, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["e"].T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU) — the dense FFN used by every assigned arch
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Parameter-tree utilities (used heavily by the gossip / DP layers)
+
+
+def tree_size(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_flatten_vector(tree) -> jnp.ndarray:
+    """Concatenate every leaf into a single 1-D vector (proxy wire format)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([x.reshape(-1) for x in leaves]) if leaves else jnp.zeros((0,))
+
+
+def tree_unflatten_vector(vec: jnp.ndarray, like) -> Params:
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(vec[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,226 @@
+"""The paper's own image-classification models (Appendix A / §4.3-4.4).
+
+MLP, LeNet5, CNN1, CNN2 (Shen et al. 2020 architectures), a small VGG
+(Kvasir, Yang et al. 2021) and a GroupNorm ResNet-ish CNN standing in for
+the ResNet18-GN used on Camelyon-17 (GroupNorm instead of BatchNorm exactly
+because per-example gradients must be well-defined for DP-SGD — paper §4.4).
+
+All are functional pytree-param models: ``init_<name>(key, image_shape,
+n_classes) -> params`` and ``apply(params, images) -> logits``. A model is
+the pair ``VisionModel(init, apply, name)`` so the FL protocol can mix
+heterogeneous private architectures (paper Fig. 5b).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .modules import Params, init_linear, linear, normal_init
+
+
+@dataclass(frozen=True)
+class VisionModel:
+    name: str
+    init: Callable
+    apply: Callable
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = (kh * kw * cin) ** -0.5
+    return {"w": scale * jax.random.normal(key, (kh, kw, cin, cout), dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def _avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _groupnorm_init(c, dtype=jnp.float32):
+    return {"g": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
+
+
+def _groupnorm(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xr = x.reshape(B, H, W, g, C // g)
+    mu = xr.mean(axis=(1, 2, 4), keepdims=True)
+    var = xr.var(axis=(1, 2, 4), keepdims=True)
+    xr = (xr - mu) * jax.lax.rsqrt(var + eps)
+    return xr.reshape(B, H, W, C) * p["g"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# MLP: two hidden layers of 200 units (paper App. A)
+
+
+def init_mlp_vision(key, image_shape, n_classes, dtype=jnp.float32) -> Params:
+    d_in = int(jnp.prod(jnp.array(image_shape)))
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "fc1": init_linear(k1, d_in, 200, bias=True, scale=d_in**-0.5, dtype=dtype),
+        "fc2": init_linear(k2, 200, 200, bias=True, scale=200**-0.5, dtype=dtype),
+        "fc3": init_linear(k3, 200, n_classes, bias=True, scale=200**-0.5, dtype=dtype),
+    }
+
+
+def apply_mlp_vision(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(linear(p["fc1"], x))
+    x = jax.nn.relu(linear(p["fc2"], x))
+    return linear(p["fc3"], x)
+
+
+# ---------------------------------------------------------------------------
+# LeNet5
+
+
+def init_lenet5(key, image_shape, n_classes, dtype=jnp.float32) -> Params:
+    H, W, C = image_shape
+    k = jax.random.split(key, 5)
+    h, w = H // 4, W // 4  # two 2x2 pools
+    return {
+        "c1": _conv_init(k[0], 5, 5, C, 6, dtype),
+        "c2": _conv_init(k[1], 5, 5, 6, 16, dtype),
+        "fc1": init_linear(k[2], h * w * 16, 120, bias=True, scale=0.05, dtype=dtype),
+        "fc2": init_linear(k[3], 120, 84, bias=True, scale=0.1, dtype=dtype),
+        "fc3": init_linear(k[4], 84, n_classes, bias=True, scale=0.1, dtype=dtype),
+    }
+
+
+def apply_lenet5(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = _maxpool(jax.nn.relu(_conv(p["c1"], x)))
+    x = _maxpool(jax.nn.relu(_conv(p["c2"], x)))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(linear(p["fc1"], x))
+    x = jax.nn.relu(linear(p["fc2"], x))
+    return linear(p["fc3"], x)
+
+
+# ---------------------------------------------------------------------------
+# CNN1 / CNN2 (Shen et al. 2020)
+
+
+def init_cnn1(key, image_shape, n_classes, dtype=jnp.float32) -> Params:
+    H, W, C = image_shape
+    k = jax.random.split(key, 4)
+    h, w = H // 4, W // 4
+    return {
+        "c1": _conv_init(k[0], 3, 3, C, 6, dtype),
+        "c2": _conv_init(k[1], 3, 3, 6, 16, dtype),
+        "fc1": init_linear(k[2], h * w * 16, 64, bias=True, scale=0.05, dtype=dtype),
+        "fc2": init_linear(k[3], 64, n_classes, bias=True, scale=0.1, dtype=dtype),
+    }
+
+
+def apply_cnn1(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = _maxpool(jax.nn.relu(_conv(p["c1"], x)))
+    x = _maxpool(jax.nn.relu(_conv(p["c2"], x)))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(linear(p["fc1"], x))
+    return linear(p["fc2"], x)
+
+
+def init_cnn2(key, image_shape, n_classes, dtype=jnp.float32) -> Params:
+    H, W, C = image_shape
+    k = jax.random.split(key, 3)
+    h, w = H // 4, W // 4
+    return {
+        "c1": _conv_init(k[0], 3, 3, C, 128, dtype),
+        "c2": _conv_init(k[1], 3, 3, 128, 128, dtype),
+        "fc": init_linear(k[2], h * w * 128, n_classes, bias=True, scale=0.02, dtype=dtype),
+    }
+
+
+def apply_cnn2(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = _maxpool(jax.nn.relu(_conv(p["c1"], x)))
+    x = _maxpool(jax.nn.relu(_conv(p["c2"], x)))
+    return linear(p["fc"], x.reshape(x.shape[0], -1))
+
+
+# ---------------------------------------------------------------------------
+# Small VGG (Kvasir) and GroupNorm residual CNN (Camelyon stand-in)
+
+
+def init_vgg_small(key, image_shape, n_classes, dtype=jnp.float32) -> Params:
+    H, W, C = image_shape
+    k = jax.random.split(key, 5)
+    return {
+        "c1": _conv_init(k[0], 3, 3, C, 32, dtype),
+        "c2": _conv_init(k[1], 3, 3, 32, 64, dtype),
+        "c3": _conv_init(k[2], 3, 3, 64, 128, dtype),
+        "fc1": init_linear(k[3], 128, 128, bias=True, scale=0.05, dtype=dtype),
+        "fc2": init_linear(k[4], 128, n_classes, bias=True, scale=0.1, dtype=dtype),
+    }
+
+
+def apply_vgg_small(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = _maxpool(jax.nn.relu(_conv(p["c1"], x)))
+    x = _maxpool(jax.nn.relu(_conv(p["c2"], x)))
+    x = _maxpool(jax.nn.relu(_conv(p["c3"], x)))
+    x = _avgpool_global(x)
+    x = jax.nn.relu(linear(p["fc1"], x))
+    return linear(p["fc2"], x)
+
+
+def init_resnet_gn(key, image_shape, n_classes, dtype=jnp.float32) -> Params:
+    """Small residual CNN with GroupNorm (the DP-compatible norm, §4.4)."""
+    H, W, C = image_shape
+    k = jax.random.split(key, 8)
+    widths = (32, 64, 128)
+    p: Params = {"stem": _conv_init(k[0], 3, 3, C, widths[0], dtype)}
+    cin = widths[0]
+    for i, cout in enumerate(widths):
+        p[f"b{i}_c1"] = _conv_init(k[2 * i + 1], 3, 3, cin, cout, dtype)
+        p[f"b{i}_n1"] = _groupnorm_init(cout, dtype)
+        p[f"b{i}_c2"] = _conv_init(k[2 * i + 2], 3, 3, cout, cout, dtype)
+        p[f"b{i}_n2"] = _groupnorm_init(cout, dtype)
+        if cin != cout:
+            p[f"b{i}_skip"] = _conv_init(jax.random.fold_in(k[7], i), 1, 1, cin, cout, dtype)
+        cin = cout
+    p["fc"] = init_linear(k[7], cin, n_classes, bias=True, scale=0.1, dtype=dtype)
+    return p
+
+
+def apply_resnet_gn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = jax.nn.relu(_conv(p["stem"], x))
+    for i in range(3):
+        h = jax.nn.relu(_groupnorm(p[f"b{i}_n1"], _conv(p[f"b{i}_c1"], x, stride=2)))
+        h = _groupnorm(p[f"b{i}_n2"], _conv(p[f"b{i}_c2"], h))
+        skip = p.get(f"b{i}_skip")
+        xs = _conv(skip, x, stride=2) if skip is not None else x[:, ::2, ::2, :]
+        x = jax.nn.relu(h + xs)
+    return linear(p["fc"], _avgpool_global(x))
+
+
+MODELS = {
+    "mlp": VisionModel("mlp", init_mlp_vision, apply_mlp_vision),
+    "lenet5": VisionModel("lenet5", init_lenet5, apply_lenet5),
+    "cnn1": VisionModel("cnn1", init_cnn1, apply_cnn1),
+    "cnn2": VisionModel("cnn2", init_cnn2, apply_cnn2),
+    "vgg": VisionModel("vgg", init_vgg_small, apply_vgg_small),
+    "resnet_gn": VisionModel("resnet_gn", init_resnet_gn, apply_resnet_gn),
+}
+
+
+def get_vision_model(name: str) -> VisionModel:
+    return MODELS[name]

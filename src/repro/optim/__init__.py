@@ -1,0 +1,3 @@
+from .optimizers import Adam, AdamState, SGD
+
+__all__ = ["Adam", "AdamState", "SGD"]

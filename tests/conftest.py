@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see ONE CPU device
+(the 512-device override belongs exclusively to repro.launch.dryrun)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_lm_batch():
+    k = jax.random.PRNGKey(1)
+    B, S, V = 4, 16, 512
+    toks = jax.random.randint(k, (B, S + 1), 0, V)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,104 @@
+"""RDP accountant: known reference values, monotonicity properties, and the
+paper's own privacy settings."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.accountant import (PrivacyAccountant, epsilon_for,
+                                   rdp_sampled_gaussian, rdp_to_eps)
+
+
+def test_plain_gaussian_rdp():
+    # q=1 reduces to the plain Gaussian mechanism: eps_RDP(alpha) = alpha/2sigma^2
+    assert rdp_sampled_gaussian(1.0, 2.0, 8) == pytest.approx(8 / (2 * 4))
+
+
+def test_zero_sampling_is_free():
+    assert rdp_sampled_gaussian(0.0, 1.0, 4) == 0.0
+
+
+def test_zero_noise_is_infinite():
+    assert math.isinf(rdp_sampled_gaussian(0.5, 0.0, 4))
+
+
+def test_reference_value_tf_privacy():
+    """The canonical TF-Privacy MNIST example: n=60000, batch=256,
+    sigma=1.1, 60 epochs, delta=1e-5 → eps ≈ 3.0 (RDP accountant).
+    Integer-order restriction makes ours slightly looser, never tighter."""
+    q = 256 / 60000
+    steps = 60 * (60000 // 256)
+    eps = epsilon_for(noise_multiplier=1.1, sample_rate=q, steps=steps,
+                      delta=1e-5)
+    assert 2.5 < eps < 3.6, eps
+
+
+@given(st.floats(0.5, 3.0), st.floats(0.001, 0.5), st.integers(1, 500))
+def test_eps_monotone_in_steps(sigma, q, steps):
+    e1 = epsilon_for(noise_multiplier=sigma, sample_rate=q, steps=steps,
+                     delta=1e-5)
+    e2 = epsilon_for(noise_multiplier=sigma, sample_rate=q, steps=steps + 50,
+                     delta=1e-5)
+    assert e2 >= e1 - 1e-9
+
+
+@given(st.floats(0.001, 0.5), st.integers(1, 200))
+def test_eps_decreases_with_noise(q, steps):
+    e_lo = epsilon_for(noise_multiplier=0.8, sample_rate=q, steps=steps,
+                       delta=1e-5)
+    e_hi = epsilon_for(noise_multiplier=2.0, sample_rate=q, steps=steps,
+                       delta=1e-5)
+    assert e_hi <= e_lo + 1e-9
+
+
+@given(st.floats(0.5, 3.0), st.integers(1, 200))
+def test_eps_increases_with_sampling(sigma, steps):
+    e_lo = epsilon_for(noise_multiplier=sigma, sample_rate=0.01, steps=steps,
+                       delta=1e-5)
+    e_hi = epsilon_for(noise_multiplier=sigma, sample_rate=0.3, steps=steps,
+                       delta=1e-5)
+    assert e_hi >= e_lo - 1e-9
+
+
+def test_smaller_batch_stronger_guarantee():
+    """Paper Fig. 11: smaller batch sizes (lower q) dramatically improve the
+    privacy guarantee at fixed epochs-equivalent steps."""
+    n, epochs = 1000, 30
+    eps = {}
+    for b in (25, 50, 125, 250):
+        steps = epochs * (n // b)
+        eps[b] = epsilon_for(noise_multiplier=1.0, sample_rate=b / n,
+                             steps=steps, delta=1e-5)
+    assert eps[25] < eps[50] < eps[125] < eps[250]
+
+
+def test_paper_histopathology_epsilons():
+    """Paper Table 2: sigma=1.4, C=0.7, delta=1e-5, batch 32, 30 epochs over
+    the four clients' training-set sizes gives eps ≈ 2.1–2.4 per client and
+    eps ≈ 1.0 for Joint training."""
+    sizes = {"C1": 2338, "C2": 2726, "C3": 2937, "C4": 2841}
+    paper = {"C1": 2.36, "C2": 2.17, "C3": 2.08, "C4": 2.12}
+    for c, n in sizes.items():
+        steps = 30 * (n // 32)
+        eps = epsilon_for(noise_multiplier=1.4, sample_rate=32 / n,
+                          steps=steps, delta=1e-5)
+        assert abs(eps - paper[c]) / paper[c] < 0.12, (c, eps, paper[c])
+    n_joint = sum(sizes.values())
+    eps_joint = epsilon_for(noise_multiplier=1.4, sample_rate=32 / n_joint,
+                            steps=30 * (n_joint // 32), delta=1e-5)
+    assert abs(eps_joint - 1.00) < 0.15, eps_joint
+
+
+def test_budget_exceeds():
+    acc = PrivacyAccountant(1.0, 0.25, 1e-5)
+    assert not acc.exceeds(1.0)
+    acc.step(2000)
+    assert acc.exceeds(1.0)
+
+
+def test_rdp_to_eps_picks_best_order():
+    alphas = [2, 4, 8]
+    rdp = [10.0, 1.0, 5.0]
+    eps_all = rdp_to_eps(rdp, alphas, 1e-5)
+    eps_single = rdp_to_eps([1.0], [4], 1e-5)
+    assert eps_all <= eps_single + 1e-12

@@ -1,0 +1,130 @@
+"""Assigned-architecture configs match the task table exactly; smoke
+variants respect the reduction bounds; layout machinery is consistent."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.configs.base import LayerSpec
+from repro.configs.registry import proxy_of, smoke_variant
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv_heads, d_ff, vocab)
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_config_numbers(arch):
+    L, d, H, KV, ff, V = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.vocab_size == V
+    if ff:
+        # MoE archs quote the per-expert hidden width in the assignment table
+        ok = {cfg.d_ff} | ({cfg.moe.d_ff_expert} if cfg.moe else set())
+        assert ff in ok, (ff, ok)
+    assert cfg.source, "every config must cite its source"
+
+
+def test_all_ten_assigned_present():
+    assert set(ASSIGNED) <= set(list_archs())
+
+
+def test_moe_details():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.moe.n_experts == 160 and ds.moe.top_k == 6
+    assert ds.moe.n_shared_experts == 2
+    assert ds.attn_impl == "mla" and ds.mla.kv_lora_rank == 512
+    arc = get_config("arctic-480b")
+    assert arc.moe.n_experts == 128 and arc.moe.top_k == 2
+    assert arc.moe.dense_residual_d_ff > 0
+    jam = get_config("jamba-1.5-large-398b")
+    assert jam.moe.n_experts == 16 and jam.moe.top_k == 2
+
+
+def test_jamba_interleave():
+    jam = get_config("jamba-1.5-large-398b")
+    layout = jam.layout()
+    kinds = [s.kind for s in layout]
+    # 1:7 attention:mamba ratio
+    assert kinds.count("attn") == len(layout) // 8
+    assert kinds.count("mamba") == len(layout) - len(layout) // 8
+    # MoE every other layer
+    ffns = [s.ffn for s in layout]
+    assert ffns.count("moe") == len(layout) // 2
+
+
+def test_gemma_window_pattern():
+    g = get_config("gemma3-4b")
+    layout = g.layout()
+    local = [s for s in layout if s.window]
+    glob = [s for s in layout if not s.window]
+    assert len(local) > 0 and len(glob) > 0
+    assert abs(len(local) / max(len(glob), 1) - 5.0) < 1.1  # ~5:1
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_smoke_variant_bounds(arch):
+    sm = smoke_variant(get_config(arch))
+    assert sm.d_model <= 512
+    assert sm.n_layers <= 10
+    if sm.moe:
+        assert sm.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_layout_length(arch):
+    cfg = get_config(arch)
+    assert len(cfg.layout()) == cfg.n_layers
+    R, rem = cfg.pattern_plan()
+    assert len(cfg.prefix) + R * len(cfg.pattern) + rem == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_counts_positive(arch):
+    c = get_config(arch).param_counts()
+    assert c["total"] >= c["active"] > 0
+
+
+def test_param_counts_match_scale():
+    # analytic totals should land near the nameplate parameter counts
+    approx = {
+        "deepseek-v2-236b": 236e9, "arctic-480b": 480e9,
+        "jamba-1.5-large-398b": 398e9, "qwen1.5-110b": 110e9,
+        "qwen2-7b": 7e9, "falcon-mamba-7b": 7e9, "qwen1.5-4b": 4e9,
+        "gemma3-4b": 4e9, "phi-3-vision-4.2b": 4.2e9,
+    }
+    for arch, target in approx.items():
+        total = get_config(arch).param_counts()["total"]
+        assert 0.5 * target < total < 1.7 * target, (arch, total, target)
+
+
+def test_proxy_spec_compat():
+    for arch in sorted(ASSIGNED):
+        cfg = get_config(arch)
+        px = proxy_of(cfg)
+        assert px.vocab_size == cfg.vocab_size
+        assert px.modality == cfg.modality
+        assert px.n_codebooks == cfg.n_codebooks
+        assert px.param_counts()["total"] < cfg.param_counts()["total"]

@@ -1,0 +1,123 @@
+"""DP-SGD (Eq. 7) unit + property tests: clipping invariants, noise
+calibration, and equivalence of the three per-example gradient schedules
+(scan / vectorized / scan-of-vmap chunked)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.dp import (add_gaussian_noise, clip_by_global_norm,
+                           dp_gradient, dp_gradient_chunked, non_dp_gradient)
+
+
+def _tree_strategy():
+    arr = st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                   min_size=1, max_size=8)
+    return st.fixed_dictionaries({
+        "a": arr, "b": st.fixed_dictionaries({"c": arr}),
+    })
+
+
+@given(_tree_strategy(), st.floats(0.1, 5.0))
+def test_clip_by_global_norm_bound(tree_lists, c):
+    tree = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x, jnp.float32), tree_lists,
+        is_leaf=lambda x: isinstance(x, list))
+    clipped, norm = clip_by_global_norm(tree, c)
+    cn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                      for x in jax.tree_util.tree_leaves(clipped)))
+    assert float(cn) <= c * (1 + 1e-4)
+    # un-clipped when already inside the ball (atol: XLA flushes
+    # subnormals to zero, so exact equality fails on denormal inputs)
+    if float(norm) <= c:
+        for a, b in zip(jax.tree_util.tree_leaves(clipped),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1.2e-38)
+
+
+def test_noise_statistics():
+    tree = {"w": jnp.zeros((50_000,))}
+    noisy = add_gaussian_noise(tree, jax.random.PRNGKey(0), stddev=2.0)
+    x = np.asarray(noisy["w"])
+    assert abs(x.mean()) < 0.05
+    assert abs(x.std() - 2.0) < 0.05
+
+
+def _quadratic_setup(B=8, d=6, seed=0):
+    k = jax.random.PRNGKey(seed)
+    X = jax.random.normal(k, (B, d))
+    y = jax.random.normal(jax.random.fold_in(k, 1), (B,))
+    params = {"w": jax.random.normal(jax.random.fold_in(k, 2), (d,)),
+              "b": jnp.zeros(())}
+
+    def loss(p, batch):
+        xb, yb = batch
+        pred = xb @ p["w"] + p["b"]
+        return jnp.mean((pred - yb) ** 2)
+
+    return params, (X, y), loss
+
+
+def test_dp_schedules_agree_at_zero_noise():
+    params, batch, loss = _quadratic_setup()
+    key = jax.random.PRNGKey(0)
+    kw = dict(clip_norm=0.7, noise_multiplier=0.0)
+    g1, _ = dp_gradient(loss, params, batch, key, vectorized=False, **kw)
+    g2, _ = dp_gradient(loss, params, batch, key, vectorized=True, **kw)
+    g3, _ = dp_gradient_chunked(
+        lambda p, ex: loss(p, ex), params,
+        {"x": batch[0], "y": batch[1]} if False else batch, key, chunk=4, **kw)
+    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g3)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_dp_grad_bounded_sensitivity():
+    """Replacing one example changes the (noise-free) summed clipped gradient
+    by at most 2C/B in L2 — the DP sensitivity bound the Gaussian mechanism
+    relies on."""
+    params, (X, y), loss = _quadratic_setup(B=8)
+    key = jax.random.PRNGKey(0)
+    C = 0.5
+    g1, _ = dp_gradient(loss, params, (X, y), key, clip_norm=C,
+                        noise_multiplier=0.0)
+    X2 = X.at[3].set(X[3] + 100.0)  # adversarial replacement
+    g2, _ = dp_gradient(loss, params, (X2, y), key, clip_norm=C,
+                        noise_multiplier=0.0)
+    diff = jnp.sqrt(sum(jnp.sum((a - b) ** 2) for a, b in zip(
+        jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2))))
+    B = X.shape[0]
+    assert float(diff) <= 2 * C / B + 1e-6
+
+
+def test_dp_noise_applied():
+    params, batch, loss = _quadratic_setup()
+    g0, _ = dp_gradient(loss, params, batch, jax.random.PRNGKey(0),
+                        clip_norm=1.0, noise_multiplier=0.0)
+    g1, _ = dp_gradient(loss, params, batch, jax.random.PRNGKey(0),
+                        clip_norm=1.0, noise_multiplier=1.0)
+    diffs = [float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree_util.tree_leaves(g0), jax.tree_util.tree_leaves(g1))]
+    assert max(diffs) > 0
+
+
+def test_microbatch_groups():
+    params, batch, loss = _quadratic_setup(B=8)
+    key = jax.random.PRNGKey(0)
+    # microbatch=B collapses to plain clipped batch gradient
+    gm, _ = dp_gradient(loss, params, batch, key, clip_norm=1e9,
+                        noise_multiplier=0.0, microbatch=8)
+    gp, _ = non_dp_gradient(loss, params, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(gm), jax.tree_util.tree_leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_non_dp_accum_equivalence():
+    params, batch, loss = _quadratic_setup(B=8)
+    g1, m1 = non_dp_gradient(loss, params, batch, accum=1)
+    g4, m4 = non_dp_gradient(loss, params, batch, accum=4)
+    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)

@@ -1,0 +1,151 @@
+"""Pallas kernel sweeps (interpret mode) against the pure-jnp oracles in
+``repro.kernels.ref``: shapes, dtypes, masking variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dp_clip import clip_accumulate, scale_accumulate, sumsq
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _qkv(key, B, H, S, D, dtype):
+    ks = jax.random.split(key, 3)
+    return [jax.random.normal(k, (B, H, S, D), dtype) for k in ks]
+
+
+@pytest.mark.parametrize("S", [64, 128, 256, 384])
+@pytest.mark.parametrize("D", [32, 64, 128])
+def test_flash_attention_shapes(S, D):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 2, S, D, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_dtypes_masks(dtype, causal):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 4, 128, 64, dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 256, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 128), (64, 128)])
+def test_flash_attention_block_shapes(blocks):
+    bq, bk = blocks
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 2, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_gqa_wrapper(G):
+    B, S, Hkv, D = 2, 128, 2, 64
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (B, S, Hkv * G, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+    out = ops.gqa_flash_attention(q, k, v, causal=True, interpret=True)
+    kr = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3)
+    want = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), kr, vr,
+                                   causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL[jnp.float32])
+
+
+# ---------------------------------------------------------------------------
+# mamba selective-scan kernel
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (96, 32), (256, 128)])
+def test_mamba_scan_chunks(S, chunk):
+    B, di, ds = 2, 16, 8
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(k, 0), (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (B, S, di)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (di, ds)))
+    Bm = jax.random.normal(jax.random.fold_in(k, 3), (B, S, ds))
+    C = jax.random.normal(jax.random.fold_in(k, 4), (B, S, ds))
+    out = mamba_scan(dt, x, Bm, C, A, chunk=chunk, interpret=True)
+    want = ref.mamba_scan_ref(dt, x, Bm, C, A)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("di,ds", [(8, 4), (32, 16), (64, 8)])
+def test_mamba_scan_dims(di, ds):
+    B, S = 1, 64
+    k = jax.random.PRNGKey(5)
+    x = jax.random.normal(jax.random.fold_in(k, 0), (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (B, S, di)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (di, ds)))
+    Bm = jax.random.normal(jax.random.fold_in(k, 3), (B, S, ds))
+    C = jax.random.normal(jax.random.fold_in(k, 4), (B, S, ds))
+    out = mamba_scan(dt, x, Bm, C, A, chunk=16, interpret=True)
+    want = ref.mamba_scan_ref(dt, x, Bm, C, A)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused DP clip-and-accumulate kernels
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 65536])
+def test_sumsq(n):
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    np.testing.assert_allclose(float(sumsq(g, interpret=True)),
+                               float(ref.sumsq_ref(g)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,clip", [(1024, 0.5), (4096, 1.0), (65536, 3.0)])
+def test_clip_accumulate(n, clip):
+    k = jax.random.PRNGKey(1)
+    g = jax.random.normal(k, (n,))
+    acc = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    out = clip_accumulate(acc, g, clip, interpret=True)
+    want = ref.clip_accumulate_ref(acc, g, clip)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scale_accumulate():
+    k = jax.random.PRNGKey(2)
+    g = jax.random.normal(k, (4096,))
+    acc = jnp.zeros((4096,))
+    out = scale_accumulate(acc, g, 0.37, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.scale_accumulate_ref(acc, g, 0.37)),
+                               rtol=1e-6)
+
+
+def test_tree_clip_accumulate_matches_global_norm():
+    from repro.core.dp import clip_by_global_norm
+    k = jax.random.PRNGKey(3)
+    tree = {"a": jax.random.normal(k, (128, 8)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(k, 1), (64,))}}
+    acc = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    got = ops.tree_clip_accumulate(acc, tree, 0.5, interpret=True)
+    want, _ = clip_by_global_norm(tree, 0.5)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

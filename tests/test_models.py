@@ -1,0 +1,195 @@
+"""Per-architecture smoke tests (reduced variants, one forward/train step on
+CPU, shape + finite checks) and the decode-path equivalence property:
+prefill+decode through the KV/SSM cache must reproduce the no-cache
+forward logits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import DPConfig, InputShape, ProxyFLConfig
+from repro.configs.registry import proxy_of, smoke_variant
+from repro.launch.steps import (StepOptions, init_serve_state,
+                                init_train_state, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.nn.model import forward, init_cache, init_model
+
+ARCHS = [a for a in list_archs()]
+
+
+def _inputs(cfg, B=2, S=16, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.modality == "audio":
+        tok = jax.random.randint(key, (B, S, cfg.n_codebooks), 0, cfg.vocab_size)
+    else:
+        tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    img = None
+    if cfg.modality == "vlm":
+        img = jax.random.normal(key, (B, cfg.n_image_tokens, cfg.frontend_dim),
+                                jnp.dtype(cfg.dtype))
+    return tok, img
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    tok, img = _inputs(cfg)
+    logits, cache, aux = forward(params, cfg, tok, img)
+    S_out = tok.shape[1] + (cfg.n_image_tokens if cfg.modality == "vlm" else 0)
+    if cfg.modality == "audio":
+        assert logits.shape == (2, S_out, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert cache is None
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_variant(get_config(arch))
+    proxy = smoke_variant(proxy_of(cfg))
+    fl = ProxyFLConfig(dp=DPConfig(enabled=True), batch_size=2)
+    opts = StepOptions(remat=False, accum=1, dp_chunk=2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, proxy, fl, opts)
+    sh = InputShape("t", 16, 2, "train")
+    specs = input_specs(cfg, sh)
+    k = jax.random.PRNGKey(1)
+    batch = {}
+    for name, sds in specs.items():
+        if sds.dtype == jnp.int32:
+            batch[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size)
+        else:
+            batch[name] = jax.random.normal(k, sds.shape, sds.dtype)
+    step = jax.jit(make_train_step(cfg, proxy, fl, opts))
+    new_state, metrics = step(state, batch, k)
+    assert bool(jnp.isfinite(metrics["private_loss"]))
+    assert bool(jnp.isfinite(metrics["proxy_loss"]))
+    # params actually moved (embed values ~0.02 have bf16 resolution well
+    # below the lr=1e-3 step; norm weights at 1.0 do not — that's what the
+    # fp32 master copy is for, so check it moved too)
+    before = state["private"]["params"]["embed"]["e"]
+    after = new_state["private"]["params"]["embed"]["e"]
+    assert not bool(jnp.allclose(before, after))
+    opt = new_state["private"]["opt"]
+    assert int(opt.t) == 1
+    if opt.p32 is not None:
+        b32 = state["private"]["opt"].p32["norm_f"]["g"]
+        a32 = opt.p32["norm_f"]["g"]
+        assert not bool(jnp.allclose(b32, a32))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill S0 tokens then decode the rest one by one; the logits at each
+    decoded position must match the full no-cache forward (the KV cache,
+    sliding windows, MLA latents and SSM states all agree with attention
+    over the raw sequence)."""
+    cfg = smoke_variant(get_config(arch))
+    if cfg.dtype != "float32":
+        cfg = cfg.with_(dtype="float32")
+    if cfg.moe is not None:
+        # capacity-MoE drops depend on batch composition; equivalence holds
+        # exactly only in the dropless regime (capacity ≥ all tokens)
+        import dataclasses
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S, S0 = 2, 12, 7
+    tok, img = _inputs(cfg, B=B, S=S, key=jax.random.PRNGKey(3))
+    full, _, _ = forward(params, cfg, tok, img)
+
+    n_img = cfg.n_image_tokens if cfg.modality == "vlm" else 0
+    cache = init_cache(cfg, B, S + n_img, dtype=jnp.float32)
+    pre = tok[:, :S0]
+    logits, cache, _ = forward(params, cfg, pre, img, cache=cache, pos_offset=0)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, :S0 + n_img]),
+                               rtol=2e-4, atol=2e-4)
+    for i in range(S0, S):
+        step_tok = tok[:, i:i + 1]
+        logits, cache, _ = forward(params, cfg, step_tok, None, cache=cache,
+                                   pos_offset=i + n_img)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full[:, n_img + i]),
+            rtol=2e-4, atol=2e-4, err_msg=f"{arch} pos {i}")
+
+
+@pytest.mark.parametrize("arch", ["gemma3-4b", "qwen2-7b-swa"])
+def test_sliding_window_masks_past(arch):
+    """A token beyond every sliding window must not influence logits at the
+    end of a long-enough sequence (locality property)."""
+    cfg = smoke_variant(get_config(arch))
+    cfg = cfg.with_(dtype="float32")
+    # force a 2-layer all-local stack so the receptive field is tiny
+    from repro.configs.base import LayerSpec
+    w = 4
+    cfg = cfg.with_(n_layers=2, prefix=(),
+                    pattern=(LayerSpec(kind="attn", ffn="dense", window=w),))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    S = 12
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    out1, _, _ = forward(params, cfg, tok)
+    # perturb a token beyond the stacked receptive field of the last position
+    reach = cfg.n_layers * (w - 1)
+    assert S > reach + 1
+    tok2 = tok.at[0, 0].set((tok[0, 0] + 1) % cfg.vocab_size)
+    out2, _, _ = forward(params, cfg, tok2)
+    np.testing.assert_allclose(np.asarray(out1[0, -1]), np.asarray(out2[0, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ring_cache_prefill_wrap():
+    """Sliding-window ring cache: prefill LONGER than the window must keep
+    only the last ``window`` keys and still match the no-cache forward."""
+    from repro.configs.base import LayerSpec
+    cfg = smoke_variant(get_config("gemma3-4b")).with_(
+        dtype="float32", n_layers=2, prefix=(),
+        pattern=(LayerSpec(kind="attn", ffn="dense", window=6),))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 16
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full, _, _ = forward(params, cfg, tok)
+    cache = init_cache(cfg, B, S, dtype=jnp.float32)
+    # ring allocated at window size, far below max_len ([R, B, slots, H, hd])
+    assert cache["stack"][0]["k"].shape[2] == 6
+    S0 = 11  # prefill wraps the 6-slot ring almost twice
+    logits, cache, _ = forward(params, cfg, tok[:, :S0], cache=cache, pos_offset=0)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]), np.asarray(full[:, S0 - 1]),
+                               rtol=2e-4, atol=2e-4)
+    for i in range(S0, S):
+        logits, cache, _ = forward(params, cfg, tok[:, i:i + 1], cache=cache,
+                                   pos_offset=i)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(full[:, i]),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"pos {i}")
+
+
+def test_serve_steps_run():
+    cfg = smoke_variant(get_config("qwen2-7b"))
+    sh = InputShape("d", 32, 2, "decode")
+    state = init_serve_state(jax.random.PRNGKey(0), cfg, sh)
+    opts = StepOptions(remat=False)
+    dec = jax.jit(make_decode_step(cfg, opts))
+    batch = {"tokens": jnp.zeros((2, 1), jnp.int32),
+             "pos": jnp.asarray(3, jnp.int32)}
+    state2, logits = dec(state, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_moe_router_balanced_aux():
+    """Router aux loss is positive and differentiable."""
+    cfg = smoke_variant(get_config("arctic-480b"))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    tok, _ = _inputs(cfg)
+
+    def loss(p):
+        _, _, aux = forward(p, cfg, tok)
+        return aux
+
+    v, g = jax.value_and_grad(loss)(params)
+    assert float(v) > 0
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0

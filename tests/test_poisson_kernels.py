@@ -1,0 +1,132 @@
+"""Poisson-subsampling DP path + the fused RMSNorm kernel sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.dp import dp_gradient, dp_gradient_poisson
+from repro.data.loader import expected_batch, poisson_batch
+from repro.kernels import ref
+from repro.kernels.rmsnorm import rmsnorm
+
+
+def test_poisson_batch_shapes_and_mask():
+    k = jax.random.PRNGKey(0)
+    x = jnp.arange(100, dtype=jnp.float32)[:, None]
+    y = jnp.arange(100, dtype=jnp.int32)
+    xb, yb, mask = poisson_batch(k, x, y, q=0.2, max_batch=50)
+    assert xb.shape == (50, 1) and mask.shape == (50,)
+    n_sel = int(mask.sum())
+    assert 5 <= n_sel <= 40  # ~Binomial(100, 0.2)
+    # real slots come first and carry selected examples
+    assert bool(jnp.all(mask[:n_sel] == 1.0))
+    assert bool(jnp.all(mask[n_sel:] == 0.0))
+
+
+def test_poisson_batch_selection_rate():
+    k = jax.random.PRNGKey(1)
+    x = jnp.zeros((1000, 1))
+    y = jnp.zeros((1000,), jnp.int32)
+    counts = []
+    for i in range(20):
+        _, _, mask = poisson_batch(jax.random.fold_in(k, i), x, y, q=0.1,
+                                   max_batch=200)
+        counts.append(float(mask.sum()))
+    assert abs(np.mean(counts) - 100) < 15
+
+
+def test_poisson_dp_gradient_masks_padding():
+    """Padding slots must contribute exactly zero to the DP sum."""
+    k = jax.random.PRNGKey(0)
+    X = jax.random.normal(k, (8, 5))
+    y = jax.random.normal(jax.random.fold_in(k, 1), (8,))
+    params = {"w": jnp.zeros((5,))}
+
+    def loss(p, batch):
+        xb, yb = batch
+        return jnp.mean((xb @ p["w"] - yb) ** 2)
+
+    mask = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    g_pad, _ = dp_gradient_poisson(loss, params, (X, y), mask,
+                                   jax.random.PRNGKey(2), clip_norm=1.0,
+                                   noise_multiplier=0.0, expected_batch=4.0)
+    g_ref, _ = dp_gradient(loss, params, (X[:4], y[:4]),
+                           jax.random.PRNGKey(2), clip_norm=1.0,
+                           noise_multiplier=0.0)
+    np.testing.assert_allclose(np.asarray(g_pad["w"]), np.asarray(g_ref["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_poisson_dp_sensitivity():
+    """One extra selected example changes the (noise-free) output by at most
+    C / E[B] — the sampled-Gaussian sensitivity."""
+    k = jax.random.PRNGKey(0)
+    X = jax.random.normal(k, (8, 5)) * 100  # big → everything clips to C
+    y = jax.random.normal(jax.random.fold_in(k, 1), (8,))
+    params = {"w": jnp.ones((5,))}
+
+    def loss(p, batch):
+        xb, yb = batch
+        return jnp.mean((xb @ p["w"] - yb) ** 2)
+
+    C, EB = 0.5, 4.0
+    m1 = jnp.asarray([1, 1, 1, 0, 0, 0, 0, 0], jnp.float32)
+    m2 = m1.at[3].set(1.0)  # one more member
+    g1, _ = dp_gradient_poisson(loss, params, (X, y), m1, k, clip_norm=C,
+                                noise_multiplier=0.0, expected_batch=EB)
+    g2, _ = dp_gradient_poisson(loss, params, (X, y), m2, k, clip_norm=C,
+                                noise_multiplier=0.0, expected_batch=EB)
+    diff = jnp.sqrt(sum(jnp.sum((a - b) ** 2) for a, b in zip(
+        jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2))))
+    assert float(diff) <= C / EB + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm kernel
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 16, 256), (1, 512), (3, 1024)])
+def test_rmsnorm_kernel_shapes(shape):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, shape)
+    g = jax.random.normal(jax.random.fold_in(k, 1), (shape[-1],))
+    out = rmsnorm(x, g, interpret=True)
+    want = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_dtypes(dtype):
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (64, 256), dtype)
+    g = jnp.ones((256,), dtype)
+    out = rmsnorm(x, g, interpret=True)
+    want = ref.rmsnorm_ref(x, g)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+def test_rmsnorm_kernel_block_boundaries():
+    # rows not a multiple of block_rows exercises the pad/slice path
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (77, 64))
+    g = jax.random.normal(jax.random.fold_in(k, 1), (64,))
+    out = rmsnorm(x, g, block_rows=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.rmsnorm_ref(x, g)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rmsnorm_matches_module():
+    from repro.nn.modules import rmsnorm as rmsnorm_mod
+    k = jax.random.PRNGKey(4)
+    x = jax.random.normal(k, (8, 128))
+    g = jax.random.normal(jax.random.fold_in(k, 1), (128,))
+    out = rmsnorm(x, g, interpret=True)
+    want = rmsnorm_mod({"g": g}, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
