@@ -72,7 +72,14 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   dp: bool = True, p_major=None, private_arch: str = "mlp",
                   proxy_arch: str = "mlp", alpha: float = 0.5,
                   sigma: float = 1.0, clip: float = 1.0,
-                  n_train_factor: float = 1.0) -> List[Dict]:
+                  n_train_factor: float = 1.0,
+                  backend: str = None, dropout_rate: float = 0.0
+                  ) -> List[Dict]:
+    """``backend`` selects the FederationEngine execution path for every
+    figure run ("auto" -> one compiled vmap round program on these
+    homogeneous cohorts; override via REPRO_BENCH_BACKEND). ``dropout_rate``
+    turns on the §3.4 per-round dropout/join scenario."""
+    backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
     rows = []
     for method in methods:
         accs, eps_out = [], None
@@ -86,10 +93,11 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
             cfg = ProxyFLConfig(
                 alpha=alpha, beta=alpha, n_clients=n_clients, rounds=rounds,
                 batch_size=min(batch_size, client_data[0][0].shape[0]),
-                seed=seed,
+                seed=seed, dropout_rate=dropout_rate,
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
             res = run_federated(method, [priv] * n_clients, prox, client_data,
-                                test, cfg, seed=seed, eval_every=rounds)
+                                test, cfg, seed=seed, eval_every=rounds,
+                                backend=backend)
             row = res["history"][-1]
             which = "private_acc" if "private_acc" in row else "acc"
             accs.extend(row[which])

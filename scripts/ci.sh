@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Single CI entry point: tier-1 test suite + headless quickstart example.
+#
+#   scripts/ci.sh           # full tier-1 run (ROADMAP verify command)
+#   scripts/ci.sh --fast    # only tests marked @pytest.mark.fast
+#
+# Extra arguments after the mode flag are forwarded to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+# plain string (not an array): empty arrays break under `set -u` on bash < 4.4
+MARK=""
+if [[ "${1:-}" == "--fast" ]]; then
+  MARK="-m fast"
+  shift
+fi
+
+echo "== tier-1: pytest =="
+# shellcheck disable=SC2086  # MARK intentionally word-splits into -m fast
+python -m pytest -x -q $MARK "$@"
+
+echo "== example: quickstart (headless) =="
+python examples/quickstart.py
+
+echo "CI OK"

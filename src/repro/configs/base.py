@@ -234,3 +234,10 @@ class ProxyFLConfig:
     dp: DPConfig = field(default_factory=DPConfig)
     topology: str = "exponential"  # exponential | ring | full
     seed: int = 0
+    # §3.4 dropout/join: per-round probability a client sits the round out
+    # (no local steps, no gossip; the time-varying graph adapts around it).
+    dropout_rate: float = 0.0
+    min_active: int = 1  # floor on participating clients per round
+    # Federation execution backend: "auto" | "loop" | "vmap" | "shard_map"
+    # (see repro.core.engine.FederationEngine for the selection guide).
+    backend: str = "auto"

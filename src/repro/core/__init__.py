@@ -4,16 +4,19 @@
 - ``accountant``  RDP accounting of the sampled Gaussian mechanism (§3.3)
 - ``gossip``      PushSum on time-varying directed graphs (§3.4)
 - ``protocol``    Algorithm 1: DML client step + gossip round
+- ``engine``      FederationEngine: loop/vmap/shard_map round executor
 - ``baselines``   FedAvg / FML / AvgPush / CWT / Regular / Joint (§4.1)
 """
 from .accountant import PrivacyAccountant, epsilon_for, rdp_sampled_gaussian, rdp_to_eps
 from .dp import add_gaussian_noise, clip_by_global_norm, dp_gradient, non_dp_gradient
+from .engine import FederationEngine, active_mask, dml_engine, single_model_engine
 from .gossip import (
     adjacency_matrix,
     comm_cost_per_round,
     debias,
     exponential_offsets,
     gossip_shift,
+    mix_matrix,
     pushsum_gossip_shard,
     pushsum_mix,
 )
@@ -33,8 +36,9 @@ from .baselines import METHODS, final_mean_acc, run_federated
 __all__ = [
     "PrivacyAccountant", "epsilon_for", "rdp_sampled_gaussian", "rdp_to_eps",
     "add_gaussian_noise", "clip_by_global_norm", "dp_gradient", "non_dp_gradient",
+    "FederationEngine", "active_mask", "dml_engine", "single_model_engine",
     "adjacency_matrix", "comm_cost_per_round", "debias", "exponential_offsets",
-    "gossip_shift", "pushsum_gossip_shard", "pushsum_mix",
+    "gossip_shift", "mix_matrix", "pushsum_gossip_shard", "pushsum_mix",
     "ClientState", "ModelSpec", "evaluate", "gossip_proxies", "init_client",
     "local_round", "make_ce_step", "make_dml_step", "proxyfl_round",
     "METHODS", "final_mean_acc", "run_federated",

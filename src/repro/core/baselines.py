@@ -1,14 +1,16 @@
-"""All comparison methods from the paper (§4.1 Baselines), sharing the
-client machinery in ``protocol.py``:
+"""All comparison methods from the paper (§4.1 Baselines), executed by the
+shared :class:`repro.core.engine.FederationEngine`:
 
-* **FedAvg** (McMahan et al. 2017)    — centralized mean of client models.
+* **FedAvg** (McMahan et al. 2017)    — centralized mean of client models
+                                        (engine mix="mean").
 * **FML** (Shen et al. 2020)          — private+proxy DML, proxies averaged
-                                        at a central server.
+                                        at a central server (mix="mean").
 * **AvgPush**                         — decentralized FedAvg: PushSum
-                                        aggregation of the single model.
+                                        aggregation of the single model
+                                        (mix="pushsum").
 * **CWT** (Chang et al. 2018)         — cyclical weight transfer around the
-                                        ring (models hop one client/round).
-* **Regular**                         — local training only.
+                                        ring (mix="ring").
+* **Regular**                         — local training only (mix="none").
 * **Joint**                           — pooled-data upper bound.
 
 Per the paper: Regular, Joint, FedAvg, AvgPush and CWT train their (single)
@@ -16,34 +18,34 @@ models with DP-SGD; ProxyFL and FML apply DP-SGD to proxies only, which is
 why their private models retain much higher utility.
 
 ``run_federated`` is the single driver used by every per-figure benchmark;
-it returns a per-round history of each client's test accuracy.
+it returns a per-round history of each client's test accuracy. The engine
+``backend`` ("loop" | "vmap" | "shard_map") is selectable per call or via
+``ProxyFLConfig.backend``; "auto" compiles the whole round into one XLA
+program (vmap) whenever the cohort is homogeneous, and falls back to the
+per-client loop for heterogeneous architectures or ragged datasets.
+``ProxyFLConfig.dropout_rate`` makes clients drop in/out per round (§3.4)
+on every backend.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ProxyFLConfig
-from ..nn.losses import macro_accuracy
-from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
-from ..optim import Adam
 from .accountant import PrivacyAccountant
-from .gossip import adjacency_matrix, comm_cost_per_round, debias, pushsum_mix
-from .protocol import (
-    ClientState,
-    ModelSpec,
-    evaluate,
-    gossip_proxies,
-    init_client,
-    local_round,
-    make_ce_step,
-)
+from .engine import dml_engine, single_model_engine
+from .protocol import ClientState, ModelSpec, evaluate
 
 METHODS = ("proxyfl", "fml", "fedavg", "avgpush", "cwt", "regular", "joint")
+
+# engine exchange rule per single-model method
+_SINGLE_MIX = {"fedavg": "mean", "avgpush": "pushsum", "cwt": "ring",
+               "regular": "none", "joint": "none"}
 
 
 @dataclass
@@ -53,35 +55,24 @@ class SingleModelClient:
     accountant: Optional[PrivacyAccountant] = None
 
 
-def _ce_local_round(client: SingleModelClient, spec: ModelSpec, data, key,
-                    cfg: ProxyFLConfig, dp: bool) -> float:
-    x, y = data
-    step = make_ce_step(spec, cfg, dp)
-    n_steps = cfg.local_steps or max(1, x.shape[0] // cfg.batch_size)
-    loss = 0.0
-    for s in range(n_steps):
-        key, kb, kn = jax.random.split(key, 3)
-        idx = jax.random.randint(kb, (cfg.batch_size,), 0, x.shape[0])
-        client.params, client.opt, loss = step(client.params, client.opt,
-                                               (x[idx], y[idx]), kn)
-        if client.accountant is not None:
-            client.accountant.step()
-    return float(loss)
+def _resolve_backend(backend, cfg: ProxyFLConfig, client_data) -> str:
+    backend = backend or cfg.backend or "auto"
+    if backend == "auto":
+        shapes = {tuple(x.shape for x in jax.tree_util.tree_leaves(d))
+                  for d in client_data}
+        if len(shapes) != 1:
+            return "loop"  # ragged per-client datasets cannot stack
+    return backend
 
 
-def _mean_params(params_list):
-    stacked = jnp.stack([tree_flatten_vector(p) for p in params_list])
-    mean = jnp.mean(stacked, axis=0)
-    return [tree_unflatten_vector(mean, params_list[0]) for _ in params_list]
-
-
-def _pushsum_params(params_list, ws, t, cfg):
-    stacked = jnp.stack([tree_flatten_vector(p) for p in params_list])
-    P = adjacency_matrix(t, len(params_list), cfg.topology)
-    mixed, w2 = pushsum_mix(stacked, jnp.asarray(ws, stacked.dtype), P)
-    unb = debias(mixed, w2)
-    return ([tree_unflatten_vector(unb[k], params_list[0]) for k in range(len(params_list))],
-            [float(v) for v in w2])
+def _accountants(cfg: ProxyFLConfig, sizes: Sequence[int]
+                 ) -> List[Optional[PrivacyAccountant]]:
+    if not cfg.dp.enabled:
+        return [None] * len(sizes)
+    return [PrivacyAccountant(
+        cfg.dp.noise_multiplier,
+        cfg.dp.sample_rate or min(1.0, cfg.batch_size / max(n, 1)),
+        cfg.dp.delta) for n in sizes]
 
 
 def run_federated(
@@ -96,6 +87,7 @@ def run_federated(
     eval_every: int = 1,
     n_classes: Optional[int] = None,
     eval_proxy: bool = False,
+    backend: Optional[str] = None,
 ) -> Dict:
     """Run ``cfg.rounds`` rounds of ``method``; return history + final state.
 
@@ -108,90 +100,70 @@ def run_federated(
     key = jax.random.PRNGKey(seed)
     xt, yt = test_data
     history: List[Dict] = []
+    backend = _resolve_backend(backend, cfg, client_data)
 
     if method in ("proxyfl", "fml"):
-        clients = [
-            init_client(jax.random.fold_in(key, k), private_specs[k], proxy_spec,
-                        cfg, client_data[k][0].shape[0])
-            for k in range(K)
-        ]
-        pairs = [(private_specs[k], proxy_spec) for k in range(K)]
+        mix = "pushsum" if method == "proxyfl" else "mean"
+        engine = dml_engine(tuple(private_specs[:K]), proxy_spec, cfg,
+                            backend=backend, mix=mix)
+        accs = _accountants(cfg, [d[0].shape[0] for d in client_data])
+        engine.attach_accountants(accs)
+        state = engine.init_states(key)
+        data = list(client_data)
         for t in range(cfg.rounds):
             rk = jax.random.fold_in(key, 10_000 + t)
-            for k in range(K):
-                local_round(clients[k], pairs[k], client_data[k],
-                            jax.random.fold_in(rk, k), cfg)
-            if method == "proxyfl":
-                gossip_proxies(clients, t, cfg)
-            else:  # FML: centralized proxy averaging
-                mean = _mean_params([c.proxy_params for c in clients])
-                for c, m in zip(clients, mean):
-                    c.proxy_params = m
+            state, _ = engine.run_round(state, data, t, rk)
             if (t + 1) % eval_every == 0 or t == cfg.rounds - 1:
-                row = {"round": t + 1,
-                       "private_acc": [evaluate(private_specs[k], clients[k].private_params, xt, yt) for k in range(K)],
-                       "proxy_acc": [evaluate(proxy_spec, clients[k].proxy_params, xt, yt) for k in range(K)]}
-                history.append(row)
-        eps = [c.accountant.epsilon() if c.accountant else None for c in clients]
+                history.append({
+                    "round": t + 1,
+                    "private_acc": [
+                        evaluate(private_specs[k],
+                                 engine.client_params(state, k, "private"),
+                                 xt, yt) for k in range(K)],
+                    "proxy_acc": [
+                        evaluate(proxy_spec,
+                                 engine.client_params(state, k, "proxy"),
+                                 xt, yt) for k in range(K)]})
+        clients = [
+            ClientState(s["private"]["params"], s["private"]["opt"],
+                        s["proxy"]["params"], s["proxy"]["opt"],
+                        float(s["w"]), accs[k])
+            for k, s in enumerate(engine.export_states(state))]
+        eps = [a.epsilon() if a else None for a in accs]
         return {"history": history, "epsilon": eps, "clients": clients}
 
     # ----- single-model methods -----
-    opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
     dp = cfg.dp.enabled
-
     if method == "joint":
         x = jnp.concatenate([d[0] for d in client_data])
         y = jnp.concatenate([d[1] for d in client_data])
-        params = proxy_spec.init(key)
-        acc = PrivacyAccountant(cfg.dp.noise_multiplier,
-                                min(1.0, cfg.batch_size / x.shape[0]),
-                                cfg.dp.delta) if dp else None
-        client = SingleModelClient(params, opt.init(params), acc)
-        import dataclasses as _dc
-        jcfg = _dc.replace(cfg, local_steps=cfg.local_steps * K) if cfg.local_steps else cfg
-        for t in range(cfg.rounds):
-            _ce_local_round(client, proxy_spec, (x, y),
-                            jax.random.fold_in(key, 10_000 + t), jcfg, dp)
-            if (t + 1) % eval_every == 0 or t == cfg.rounds - 1:
-                history.append({"round": t + 1,
-                                "acc": [evaluate(proxy_spec, client.params, xt, yt)]})
-        return {"history": history,
-                "epsilon": [client.accountant.epsilon() if client.accountant else None],
-                "clients": [client]}
+        jcfg = (dataclasses.replace(cfg, local_steps=cfg.local_steps * K)
+                if cfg.local_steps else cfg)
+        data = [(x, y)]
+        n_eff, engine_cfg = 1, jcfg
+    else:
+        data = list(client_data)
+        n_eff, engine_cfg = K, cfg
 
-    clients = []
-    for k in range(K):
-        p = proxy_spec.init(jax.random.fold_in(key, k))
-        acc = PrivacyAccountant(cfg.dp.noise_multiplier,
-                                min(1.0, cfg.batch_size / client_data[k][0].shape[0]),
-                                cfg.dp.delta) if dp else None
-        clients.append(SingleModelClient(p, opt.init(p), acc))
-    ws = [1.0] * K
-
-    for t in range(cfg.rounds):
+    engine = single_model_engine(proxy_spec, engine_cfg, dp,
+                                 mix=_SINGLE_MIX[method], backend=backend,
+                                 n_clients=n_eff)
+    accs = _accountants(engine_cfg, [d[0].shape[0] for d in data])
+    engine.attach_accountants(accs)
+    state = engine.init_states(key)
+    for t in range(engine_cfg.rounds):
         rk = jax.random.fold_in(key, 10_000 + t)
-        for k in range(K):
-            _ce_local_round(clients[k], proxy_spec, client_data[k],
-                            jax.random.fold_in(rk, k), cfg, dp)
-        if method == "fedavg":
-            mean = _mean_params([c.params for c in clients])
-            for c, m in zip(clients, mean):
-                c.params = m
-        elif method == "avgpush":
-            mixed, ws = _pushsum_params([c.params for c in clients], ws, t, cfg)
-            for c, m in zip(clients, mixed):
-                c.params = m
-        elif method == "cwt":  # ring hop
-            last = clients[-1].params
-            for k in range(K - 1, 0, -1):
-                clients[k].params = clients[k - 1].params
-            clients[0].params = last
-        # regular: no exchange
-        if (t + 1) % eval_every == 0 or t == cfg.rounds - 1:
-            history.append({"round": t + 1,
-                            "acc": [evaluate(proxy_spec, c.params, xt, yt) for c in clients]})
-
-    eps = [c.accountant.epsilon() if c.accountant else None for c in clients]
+        state, _ = engine.run_round(state, data, t, rk)
+        if (t + 1) % eval_every == 0 or t == engine_cfg.rounds - 1:
+            history.append({
+                "round": t + 1,
+                "acc": [evaluate(proxy_spec,
+                                 engine.client_params(state, k, "proxy"),
+                                 xt, yt) for k in range(n_eff)]})
+    clients = [SingleModelClient(s["proxy"]["params"], s["proxy"]["opt"],
+                                 accs[k])
+               for k, s in enumerate(engine.export_states(state))]
+    eps = [a.epsilon() if a else None for a in accs]
     return {"history": history, "epsilon": eps, "clients": clients}
 
 

@@ -1,0 +1,510 @@
+"""FederationEngine — ONE executor for every federated round in the repo.
+
+The paper's round structure (Algorithm 1: ``local_steps`` local updates per
+client, then one exchange over a column-stochastic graph) is shared by every
+method in the METHODS table — ProxyFL, FML, FedAvg, AvgPush, CWT, Regular —
+and by the LLM-scale driver in ``launch/train.py``. This module owns that
+round once, behind three selectable backends:
+
+``loop``
+    One Python iteration per client per step, each client's step jitted
+    individually. The only backend that supports *heterogeneous private
+    architectures* (paper Fig. 5b — every client may bring a different
+    model; tree structures differ, so clients cannot be stacked). Gossip
+    stacks the (shared-architecture) proxies host-side and applies P^(t)
+    as one matmul — the original simulation semantics.
+
+``vmap`` (default for homogeneous cohorts)
+    Client states are stacked into one pytree with a leading K dim; the
+    whole round is ONE compiled XLA program: ``jax.lax.scan`` fuses the
+    ``local_steps`` loop, ``jax.vmap`` batches the K clients, and the
+    PushSum exchange runs on-device as a [K,K]×[K,D] matmul on the stacked
+    flattened proxies — no per-round ``tree_flatten_vector`` host
+    round-trips and no O(K·steps) Python dispatch. P^(t) and the active
+    mask are runtime *arguments*, so all rounds reuse a single compilation.
+
+``shard_map``
+    Same stacked round, but with one client per device of a mesh axis and
+    the exchange realized as a ``jax.lax.ppermute`` collective
+    (:func:`repro.core.gossip.pushsum_gossip_shard`) — the TPU-native
+    O(1)-per-round communication path used at LLM scale. Requires a mesh
+    whose ``axis`` has exactly ``n_clients`` devices. The round-t shift and
+    the active pattern are trace-time static (each distinct membership
+    pattern compiles its own collective schedule).
+
+Backend selection guide
+-----------------------
+* heterogeneous private models            -> ``loop`` (forced)
+* homogeneous cohort, one host            -> ``vmap``
+* one client per device/pod on a mesh     -> ``shard_map``
+* ``"auto"``                              -> ``vmap`` when client states
+  share one tree structure and per-client datasets have equal shapes,
+  otherwise ``loop``.
+
+Exchange rules (``mix``) are column-stochastic matrices built by
+:func:`repro.core.gossip.mix_matrix`: ``"pushsum"`` (ProxyFL/AvgPush),
+``"mean"`` (FedAvg/FML), ``"ring"`` (CWT), ``"none"`` (Regular/Joint).
+
+Dropout/join (paper §3.4): every backend threads an ``active`` bool mask
+through the round — inactive clients run no local steps, keep their state,
+and the time-varying graph re-knits itself over the active subset (mass
+conservation and de-biased convergence to the ACTIVE average are
+preserved). Set ``ProxyFLConfig.dropout_rate`` for a deterministic
+per-round schedule, or pass ``active=`` explicitly to ``run_round``.
+
+Typical usage::
+
+    engine = dml_engine((spec,) * K, proxy_spec, cfg)   # backend="auto"
+    state = engine.init_states(jax.random.PRNGKey(0))
+    for t in range(cfg.rounds):
+        state, metrics = engine.run_round(
+            state, client_data, t, jax.random.fold_in(key, 10_000 + t))
+    params_k = engine.client_params(state, k, role="private")
+
+The per-client state is a pytree dict with (at least) ``{"proxy":
+{"params", "opt"}, "w"}``; the engine gossips ``proxy.params`` and the
+PushSum weight ``w`` and leaves everything else (private model, optimizer
+moments, step counters) client-local — exactly the paper's privacy
+boundary: only proxies ever cross clients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ProxyFLConfig
+from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
+from ..optim import Adam
+from .gossip import gossip_shift, mix_matrix, pushsum_gossip_shard, shard_map_fn
+
+BACKENDS = ("loop", "vmap", "shard_map")
+MIXES = ("pushsum", "mean", "ring", "none")
+
+StepFn = Callable[[Dict, Any, jnp.ndarray], Tuple[Dict, Dict]]
+InitFn = Callable[[jnp.ndarray], Dict]
+SampleFn = Callable[[Any, jnp.ndarray], Any]
+
+
+def active_mask(t: int, n_clients: int, cfg: ProxyFLConfig
+                ) -> Optional[np.ndarray]:
+    """Deterministic per-round §3.4 dropout schedule from the config.
+
+    Returns None (everyone participates) when ``cfg.dropout_rate == 0``;
+    otherwise a bool[K] mask drawn from a seed derived from (cfg.seed, t),
+    re-sampled identically by every backend and across reruns."""
+    if not cfg.dropout_rate:
+        return None
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 7919, t]))
+    act = rng.random(n_clients) >= cfg.dropout_rate
+    floor = max(1, min(cfg.min_active, n_clients))
+    if act.sum() < floor:
+        act[rng.choice(n_clients, size=floor, replace=False)] = True
+    return act
+
+
+def stack_states(states: Sequence[Dict]) -> Dict:
+    """List of per-client state pytrees -> one pytree with leading K dim."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(stacked: Dict, k: int) -> Dict:
+    return jax.tree_util.tree_map(lambda x: x[k], stacked)
+
+
+def _tree_where(mask_k: jnp.ndarray, new: Dict, old: Dict) -> Dict:
+    """Per-client select over stacked pytrees (mask_k: bool[K])."""
+    def sel(n, o):
+        m = mask_k.reshape((mask_k.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+class FederationEngine:
+    """Multi-backend executor of one federated round (see module docstring).
+
+    Parameters
+    ----------
+    cfg : ProxyFLConfig
+        Protocol knobs (local_steps, batch_size, topology, dropout_rate...).
+    n_clients : int
+    step_fns : StepFn | Sequence[StepFn]
+        ``step(state, batch, key) -> (state, metrics)`` — one client's local
+        update. A sequence (len K) is allowed for the loop backend only
+        (heterogeneous architectures).
+    init_fns : InitFn | Sequence[InitFn]
+        ``init(key) -> state`` per client.
+    sample_fn : SampleFn
+        ``sample(client_data, key) -> batch`` — draws one local batch.
+    backend : "auto" | "loop" | "vmap" | "shard_map"
+    mix : "pushsum" | "mean" | "ring" | "none"
+    mesh, axis : mesh + axis name for the shard_map backend.
+    """
+
+    def __init__(self, cfg: ProxyFLConfig, *, n_clients: int,
+                 step_fns, init_fns, sample_fn: SampleFn,
+                 backend: str = "auto", mix: str = "pushsum",
+                 mesh=None, axis: str = "clients"):
+        assert mix in MIXES, mix
+        self.cfg = cfg
+        self.K = n_clients
+        self.step_fns = (list(step_fns) if isinstance(step_fns, (list, tuple))
+                         else [step_fns] * n_clients)
+        self.init_fns = (list(init_fns) if isinstance(init_fns, (list, tuple))
+                         else [init_fns] * n_clients)
+        assert len(self.step_fns) == n_clients
+        self.sample_fn = sample_fn
+        self.mix = mix
+        self.mesh = mesh
+        self.axis = axis
+        self.accountants: List = [None] * n_clients
+        homogeneous = all(f is self.step_fns[0] for f in self.step_fns)
+        if backend == "auto":
+            backend = "vmap" if homogeneous else "loop"
+        assert backend in BACKENDS, backend
+        if backend in ("vmap", "shard_map"):
+            assert homogeneous, (
+                f"{backend} backend requires a homogeneous cohort; "
+                "heterogeneous private architectures need backend='loop'")
+        if backend == "shard_map":
+            assert mesh is not None, "shard_map backend needs a mesh"
+            assert dict(mesh.shape).get(axis) == n_clients, (
+                f"mesh axis {axis!r} must hold exactly {n_clients} devices")
+        self.backend = backend
+        # donation lets XLA update params/opt in place; CPU only warns
+        self._donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._loop_steps: Dict = {}   # id(step_fn) -> jitted one-step
+        self._rounds: Dict = {}       # compile cache: key -> jitted round
+        self._data_cache: Dict = {}   # id(data) -> (ref, stacked)
+
+    # -- state construction / access ---------------------------------------
+
+    def init_states(self, key) -> Any:
+        """Per-client init at fold_in(key, k) — identical across backends."""
+        states = [self.init_fns[k](jax.random.fold_in(key, k))
+                  for k in range(self.K)]
+        return states if self.backend == "loop" else stack_states(states)
+
+    def export_states(self, state) -> List[Dict]:
+        if self.backend == "loop":
+            return list(state)
+        return [unstack_state(state, k) for k in range(self.K)]
+
+    def client_state(self, state, k: int) -> Dict:
+        return state[k] if self.backend == "loop" else unstack_state(state, k)
+
+    def client_params(self, state, k: int, role: str = "proxy"):
+        s = state[k] if self.backend == "loop" else state
+        p = s[role]["params"]
+        return p if self.backend == "loop" else jax.tree_util.tree_map(
+            lambda x: x[k], p)
+
+    def attach_accountants(self, accountants: Sequence) -> None:
+        assert len(accountants) == self.K
+        self.accountants = list(accountants)
+
+    # -- round execution ----------------------------------------------------
+
+    def n_steps(self, data_k) -> int:
+        if self.cfg.local_steps:
+            return self.cfg.local_steps
+        n = jax.tree_util.tree_leaves(data_k)[0].shape[0]
+        return max(1, n // self.cfg.batch_size)
+
+    def run_round(self, state, data: Sequence, t: int, key,
+                  active=None) -> Tuple[Any, Dict[str, np.ndarray]]:
+        """One full federated round: local steps on every ACTIVE client,
+        then one graph exchange. ``data`` is a sequence of per-client data
+        pytrees; ``key`` is the round key (client k steps with
+        ``fold_in(key, k)``, matching the historical schedule)."""
+        if active is None:
+            active = active_mask(t, self.K, self.cfg)
+        act = None if active is None else np.asarray(active, bool)
+        if act is not None:
+            assert act.shape == (self.K,)
+        if self.backend == "loop":
+            state, metrics = self._round_loop(state, data, t, key, act)
+        else:
+            state, metrics = self._round_stacked(state, data, t, key, act)
+        for k, acc in enumerate(self.accountants):
+            if acc is not None and (act is None or act[k]):
+                acc.step(self.n_steps(data[k]))
+        return state, metrics
+
+    # -- loop backend --------------------------------------------------------
+
+    def _one_step(self, k: int):
+        """(state, data_k, chain_key) -> (state, chain_key, metrics) —
+        the same composed body the vmap/shard scan uses, jitted once per
+        DISTINCT step_fn (homogeneous cohorts share one compilation)."""
+        step_fn, sample = self.step_fns[k], self.sample_fn
+        cached = self._loop_steps.get(id(step_fn))
+        if cached is None:
+            def one(state, data_k, key):
+                key, kb, kn = jax.random.split(key, 3)
+                batch = sample(data_k, kb)
+                state, m = step_fn(state, batch, kn)
+                return state, key, m
+
+            cached = self._loop_steps[id(step_fn)] = jax.jit(one)
+        return cached
+
+    def _round_loop(self, states, data, t, key, act):
+        states = list(states)  # same no-aliasing contract as the stacked backends
+        per_client: List[Optional[Dict]] = [None] * self.K
+        for k in range(self.K):
+            if act is not None and not act[k]:
+                continue
+            one = self._one_step(k)
+            ck = jax.random.fold_in(key, k)
+            s = states[k]
+            m: Dict = {}
+            for _ in range(self.n_steps(data[k])):
+                s, ck, m = one(s, data[k], ck)
+            states[k] = s
+            per_client[k] = m
+        if self.mix != "none" and self.K > 1:
+            P = mix_matrix(self.mix, t, self.K, self.cfg.topology, act)
+            flat = jnp.stack([tree_flatten_vector(s["proxy"]["params"])
+                              for s in states])
+            w = jnp.asarray([jnp.asarray(s["w"]) for s in states], flat.dtype)
+            mixed = jnp.asarray(P, flat.dtype) @ flat
+            w2 = jnp.asarray(P, w.dtype) @ w
+            unb = mixed / w2[:, None]
+            like = states[0]["proxy"]["params"]
+            for k in range(self.K):
+                states[k] = dict(states[k])
+                states[k]["proxy"] = dict(
+                    states[k]["proxy"],
+                    params=tree_unflatten_vector(unb[k], like))
+                states[k]["w"] = w2[k]
+        keys = set().union(*(m.keys() for m in per_client if m is not None))
+        metrics = {kk: np.asarray([float(m[kk]) if m is not None else np.nan
+                                   for m in per_client])
+                   for kk in sorted(keys)}
+        return states, metrics
+
+    # -- vmap / shard_map backends ------------------------------------------
+
+    def _stack_data(self, data):
+        cached = self._data_cache.get(id(data))
+        if cached is not None and cached[0] is data:
+            return cached[1]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *data)
+        self._data_cache = {id(data): (data, stacked)}  # hold ref: id stays valid
+        return stacked
+
+    def _mix_topology(self):
+        """(graph topology, self-weight) realizing ``self.mix`` — mean is
+        dense averaging ("full"), CWT's ring hop keeps nothing of self."""
+        return {
+            "pushsum": (self.cfg.topology, 0.5),
+            "mean": ("full", 0.5),
+            "ring": ("ring", 0.0),
+            "none": (None, None),
+        }[self.mix]
+
+    def _build_round(self, n_steps: int, mix_op):
+        """One jitted program for the WHOLE round. ``mix_op(flat, w, P) ->
+        (mixed, w2)`` is the only backend difference: a [K,K] matmul on the
+        stacked proxies (vmap — P is a runtime arg, so every round reuses
+        one compilation) or a ppermute collective (shard_map — the schedule
+        is baked in, P is unused). ``mix_op=None`` skips the exchange."""
+        step_fn, sample, K = self.step_fns[0], self.sample_fn, self.K
+
+        def one(state, data_k, key):
+            key, kb, kn = jax.random.split(key, 3)
+            batch = sample(data_k, kb)
+            state, m = step_fn(state, batch, kn)
+            return state, key, m
+
+        def round_fn(stacked, data, P, act, key):
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(K, dtype=jnp.uint32))
+
+            def body(carry, _):
+                st, ks = carry
+                st2, ks2, m = jax.vmap(one)(st, data, ks)
+                return (st2, ks2), m
+
+            (trained, _), ms = jax.lax.scan(
+                body, (stacked, keys), None, length=n_steps)
+            last = jax.tree_util.tree_map(lambda x: x[-1], ms)
+            last = {k: jnp.where(act, v, jnp.nan) for k, v in last.items()}
+            trained = _tree_where(act, trained, stacked)  # dropouts keep state
+            if mix_op is not None:
+                theta = trained["proxy"]["params"]
+                like = jax.tree_util.tree_map(lambda x: x[0], theta)
+                flat = jax.vmap(tree_flatten_vector)(theta)        # [K, D]
+                w = jnp.asarray(trained["w"], flat.dtype)
+                mixed, w2 = mix_op(flat, w, P)                     # on-device
+                unb = mixed / w2[:, None]
+                theta2 = jax.vmap(
+                    lambda v: tree_unflatten_vector(v, like))(unb)
+                trained = dict(trained)
+                trained["proxy"] = dict(trained["proxy"], params=theta2)
+                trained["w"] = w2.astype(jnp.result_type(trained["w"]))
+            return trained, last
+
+        return jax.jit(round_fn, donate_argnums=self._donate)
+
+    def _shard_mix_op(self, t: int, act_key):
+        """ppermute exchange along ``self.axis``; t/active are trace-time
+        static (new collective schedule per membership pattern)."""
+        topo, sw = self._mix_topology()
+        spec = jax.sharding.PartitionSpec(self.axis)
+        gossip_sm = shard_map_fn(
+            lambda f, w: pushsum_gossip_shard(
+                f, w, t, self.axis, self.K, topo, sw, active=act_key),
+            self.mesh, in_specs=(spec, spec), out_specs=(spec, spec))
+        return lambda flat, w, P: gossip_sm(flat, w)
+
+    def _round_stacked(self, stacked, data, t, key, act):
+        shapes = {tuple(x.shape for x in jax.tree_util.tree_leaves(d))
+                  for d in data}
+        if len(shapes) != 1:
+            raise ValueError(
+                "vmap/shard_map backends need identical per-client data "
+                f"shapes (got {shapes}); use backend='loop' for ragged data")
+        data_s = self._stack_data(data)
+        n_steps = self.n_steps(data[0])
+        act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
+        mixing = self.mix != "none" and self.K > 1
+        P = jnp.zeros((0,))  # placeholder when no matmul mix runs
+        if self.backend == "vmap":
+            rkey = ("vmap", n_steps)
+            if rkey not in self._rounds:
+                matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,
+                                             P.astype(w.dtype) @ w)
+                self._rounds[rkey] = self._build_round(
+                    n_steps, matmul if mixing else None)
+            if mixing:
+                P = jnp.asarray(
+                    mix_matrix(self.mix, t, self.K, self.cfg.topology, act),
+                    jnp.float32)
+        else:
+            A = self.K if act is None else int(act.sum())
+            topo, _ = self._mix_topology()
+            # cache key: the ppermute schedule is fully determined by the
+            # (mix-mapped) shift and the membership pattern
+            shift = gossip_shift(t, A, topo) if mixing else None
+            act_key = None if act is None else tuple(bool(a) for a in act)
+            rkey = ("shard", n_steps, shift, act_key, self.mix)
+            if rkey not in self._rounds:
+                self._rounds[rkey] = self._build_round(
+                    n_steps, self._shard_mix_op(t, act_key) if mixing else None)
+        stacked, last = self._rounds[rkey](stacked, data_s, P, act_arr, key)
+        metrics = {k: np.asarray(v) for k, v in last.items()}
+        return stacked, metrics
+
+
+# ---------------------------------------------------------------------------
+# factories: classifier-scale engines built from ModelSpecs
+
+
+def classifier_sampler(batch_size: int) -> SampleFn:
+    """Uniform-with-replacement batch draw from (x, y) — the historical
+    client sampling used by ``local_round``/``_ce_local_round``."""
+
+    def sample(data_k, kb):
+        x, y = data_k
+        idx = jax.random.randint(kb, (batch_size,), 0, x.shape[0])
+        return (x[idx], y[idx])
+
+    return sample
+
+
+def _dml_state_step(private_spec, proxy_spec, cfg: ProxyFLConfig) -> StepFn:
+    from .protocol import dml_step_fn
+    raw = dml_step_fn(private_spec, proxy_spec, cfg)
+
+    def step(state, batch, key):
+        phi, opt_phi, theta, opt_theta, m = raw(
+            state["private"]["params"], state["private"]["opt"],
+            state["proxy"]["params"], state["proxy"]["opt"], batch, key)
+        return {"private": {"params": phi, "opt": opt_phi},
+                "proxy": {"params": theta, "opt": opt_theta},
+                "w": state["w"]}, m
+
+    return step
+
+
+def _dml_state_init(private_spec, proxy_spec, cfg: ProxyFLConfig) -> InitFn:
+    opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
+
+    def init(key):
+        kf, kh = jax.random.split(key)
+        phi = private_spec.init(kf)
+        theta = proxy_spec.init(kh)
+        return {"private": {"params": phi, "opt": opt.init(phi)},
+                "proxy": {"params": theta, "opt": opt.init(theta)},
+                "w": jnp.ones((), jnp.float32)}
+
+    return init
+
+
+def _ce_state_step(spec, cfg: ProxyFLConfig, dp: bool) -> StepFn:
+    from .protocol import ce_step_fn
+    raw = ce_step_fn(spec, cfg, dp)
+
+    def step(state, batch, key):
+        params, opt, loss = raw(state["proxy"]["params"],
+                                state["proxy"]["opt"], batch, key)
+        return {"proxy": {"params": params, "opt": opt},
+                "w": state["w"]}, {"loss": loss}
+
+    return step
+
+
+def _ce_state_init(spec, cfg: ProxyFLConfig) -> InitFn:
+    opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
+
+    def init(key):
+        params = spec.init(key)
+        return {"proxy": {"params": params, "opt": opt.init(params)},
+                "w": jnp.ones((), jnp.float32)}
+
+    return init
+
+
+@functools.lru_cache(maxsize=8)
+def dml_engine(private_specs: Tuple, proxy_spec, cfg: ProxyFLConfig,
+               backend: str = "auto", mix: str = "pushsum"
+               ) -> FederationEngine:
+    """Engine for the two-model (private+proxy DML) family: ProxyFL
+    (mix="pushsum") and FML (mix="mean"). A small LRU lets repeated
+    federations with the same specs reuse compiled round programs without
+    pinning every sweep configuration's engine (and its device-resident
+    stacked data) in memory forever."""
+    K = len(private_specs)
+    homogeneous = all(s == private_specs[0] for s in private_specs)
+    if backend == "auto":
+        backend = "vmap" if homogeneous else "loop"
+    if homogeneous:
+        step_fns: Any = _dml_state_step(private_specs[0], proxy_spec, cfg)
+        init_fns: Any = _dml_state_init(private_specs[0], proxy_spec, cfg)
+    else:
+        step_fns = [_dml_state_step(s, proxy_spec, cfg) for s in private_specs]
+        init_fns = [_dml_state_init(s, proxy_spec, cfg) for s in private_specs]
+    return FederationEngine(
+        cfg, n_clients=K, step_fns=step_fns, init_fns=init_fns,
+        sample_fn=classifier_sampler(cfg.batch_size), backend=backend, mix=mix)
+
+
+@functools.lru_cache(maxsize=8)
+def single_model_engine(spec, cfg: ProxyFLConfig, dp: bool,
+                        mix: str = "mean", backend: str = "auto",
+                        n_clients: int = 0) -> FederationEngine:
+    """Engine for the single-model baselines: FedAvg (mix="mean"), AvgPush
+    ("pushsum"), CWT ("ring"), Regular/Joint ("none"). The model lives in
+    the gossiped ``proxy`` slot of the engine state."""
+    K = n_clients or cfg.n_clients
+    return FederationEngine(
+        cfg, n_clients=K,
+        step_fns=_ce_state_step(spec, cfg, dp),
+        init_fns=_ce_state_init(spec, cfg),
+        sample_fn=classifier_sampler(cfg.batch_size),
+        backend="vmap" if backend == "auto" else backend, mix=mix)

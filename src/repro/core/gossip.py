@@ -97,6 +97,37 @@ def pushsum_mix(thetas: jnp.ndarray, weights: jnp.ndarray, P: jnp.ndarray
     return P @ thetas, P.astype(weights.dtype) @ weights
 
 
+def mix_matrix(mix: str, t: int, n_clients: int, topology: str = "exponential",
+               active=None, self_weight: float = 0.5) -> np.ndarray:
+    """Column-stochastic mixing matrix for ONE federated exchange.
+
+    Every aggregation rule in the METHODS table is a K×K column-stochastic
+    matrix applied to the stacked client vectors (plus PushSum de-biasing,
+    which is the identity whenever the matrix keeps w at 1):
+
+    * ``"pushsum"`` — the paper's §3.4 time-varying graph P^(t) (ProxyFL,
+      AvgPush);
+    * ``"mean"``    — uniform averaging among active clients (FedAvg, FML's
+      central proxy server);
+    * ``"ring"``    — cyclical weight transfer: a pure permutation, client k
+      receives client k-1's model (CWT);
+    * ``"none"``    — no exchange (Regular / Joint).
+
+    ``active`` masks out dropped clients exactly as in
+    :func:`adjacency_matrix`: they keep their own state (identity column)
+    and neither send nor receive.
+    """
+    if mix == "none":
+        return np.eye(n_clients)
+    if mix == "pushsum":
+        return adjacency_matrix(t, n_clients, topology, self_weight, active)
+    if mix == "mean":
+        return adjacency_matrix(t, n_clients, "full", self_weight, active)
+    if mix == "ring":
+        return adjacency_matrix(t, n_clients, "ring", 0.0, active)
+    raise ValueError(mix)
+
+
 def debias(thetas: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     """θ_k / w_k (Algorithm 1 line 11)."""
     return thetas / weights[:, None]
@@ -106,29 +137,63 @@ def debias(thetas: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
 # distributed backend: one client per mesh-axis index, ppermute exchange
 
 
+def shard_map_fn(f, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (jax>=0.5 exposes ``jax.shard_map``;
+    0.4.x only has the experimental entry point with ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def pushsum_gossip_shard(theta_local: jnp.ndarray, w_local: jnp.ndarray,
                          t: int, axis: str, n_clients: int,
                          topology: str = "exponential",
-                         self_weight: float = 0.5):
+                         self_weight: float = 0.5,
+                         active=None):
     """Inside shard_map: one PushSum round along mesh axis ``axis``.
 
     Sends (1-self_weight)·(θ, w) to the peer ``shift`` ahead; keeps
     self_weight·(θ, w). Exactly Algorithm 1 lines 7-10 with P^(t) from
     :func:`adjacency_matrix`, realized as a collective-permute (cost
-    independent of K — the O(1) communication claim)."""
-    shift = gossip_shift(t, n_clients, topology)
+    independent of K — the O(1) communication claim).
+
+    ``active`` (static bool sequence, len K) is the §3.4 dropout/join mask:
+    inactive clients keep their state untouched, the permutation runs over
+    the ACTIVE subset only (so the graph stays connected), and dense
+    ("full") mixing becomes a masked psum over active participants. The
+    mask is trace-time static — each distinct pattern is its own compiled
+    collective schedule, matching how a real deployment would re-plan its
+    communication graph on membership changes."""
+    if active is None:
+        active_idx = list(range(n_clients))
+    else:
+        assert len(active) == n_clients
+        active_idx = [i for i in range(n_clients) if active[i]]
+    A = len(active_idx)
+    if A <= 1:
+        return theta_local, w_local
+    shift = gossip_shift(t, A, topology)
     if shift == 0:
         return theta_local, w_local
-    if shift == -1:  # dense averaging (used by AvgPush-full / FedAvg-like)
-        theta = jax.lax.pmean(theta_local, axis)
-        w = jax.lax.pmean(w_local, axis)
-        return theta, w
-    perm = [(i, (i + shift) % n_clients) for i in range(n_clients)]
+    amask = np.zeros((n_clients,), np.float32)
+    amask[active_idx] = 1.0
+    idx = jax.lax.axis_index(axis)
+    m = jnp.asarray(amask)[idx].astype(theta_local.dtype)
+    if shift == -1:  # dense averaging among active (AvgPush-full / FedAvg)
+        sum_t = jax.lax.psum(m * theta_local, axis)
+        sum_w = jax.lax.psum(m * w_local, axis)
+        return (m * sum_t / A + (1.0 - m) * theta_local,
+                m * sum_w / A + (1.0 - m) * w_local)
+    perm = [(active_idx[p], active_idx[(p + shift) % A]) for p in range(A)]
+    keep = 1.0 - m * (1.0 - self_weight)  # self_weight if active else 1
     send_t = (1.0 - self_weight) * theta_local
     send_w = (1.0 - self_weight) * w_local
-    recv_t = jax.lax.ppermute(send_t, axis, perm)
+    recv_t = jax.lax.ppermute(send_t, axis, perm)  # zeros at non-receivers
     recv_w = jax.lax.ppermute(send_w, axis, perm)
-    return self_weight * theta_local + recv_t, self_weight * w_local + recv_w
+    return keep * theta_local + recv_t, keep * w_local + recv_w
 
 
 # ---------------------------------------------------------------------------

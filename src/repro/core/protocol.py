@@ -13,12 +13,11 @@ steps, then one PushSum gossip exchange of the proxies (§3.4).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ProxyFLConfig
 from ..nn.losses import cross_entropy, dml_loss
@@ -26,7 +25,7 @@ from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
 from .accountant import PrivacyAccountant
 from .dp import dp_gradient, non_dp_gradient
-from .gossip import adjacency_matrix, debias, pushsum_mix
+from .gossip import debias, pushsum_mix
 
 Params = Any
 
@@ -49,12 +48,15 @@ class ClientState:
 
 
 # ---------------------------------------------------------------------------
-# jitted step builders (cached per (spec, cfg) so federations reuse XLA code)
+# step builders (cached per (spec, cfg) so federations reuse XLA code).
+# ``*_step_fn`` returns the raw traceable function — the FederationEngine
+# composes it under its own jit/vmap/scan; ``make_*_step`` wraps it in
+# jax.jit for direct per-step callers.
 
 
 @functools.lru_cache(maxsize=None)
-def make_dml_step(private_spec: ModelSpec, proxy_spec: ModelSpec,
-                  cfg: ProxyFLConfig):
+def dml_step_fn(private_spec: ModelSpec, proxy_spec: ModelSpec,
+                cfg: ProxyFLConfig):
     """One joint DML step (Algorithm 1 lines 3-5): private non-DP update of
     Eq. (4), proxy DP-SGD update of Eq. (5)/(7), both at round-start params."""
     opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
@@ -69,7 +71,6 @@ def make_dml_step(private_spec: ModelSpec, proxy_spec: ModelSpec,
         peer = private_spec.apply(phi, x)
         return dml_loss(proxy_spec.apply(theta, x), peer, y, cfg.beta)
 
-    @jax.jit
     def step(phi, opt_phi, theta, opt_theta, batch, key):
         # proxy first in code order, but both use round-start params
         if cfg.dp.enabled:
@@ -92,7 +93,13 @@ def make_dml_step(private_spec: ModelSpec, proxy_spec: ModelSpec,
 
 
 @functools.lru_cache(maxsize=None)
-def make_ce_step(spec: ModelSpec, cfg: ProxyFLConfig, dp: bool):
+def make_dml_step(private_spec: ModelSpec, proxy_spec: ModelSpec,
+                  cfg: ProxyFLConfig):
+    return jax.jit(dml_step_fn(private_spec, proxy_spec, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def ce_step_fn(spec: ModelSpec, cfg: ProxyFLConfig, dp: bool):
     """Plain CE step for single-model methods (FedAvg/AvgPush/CWT/...)."""
     opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
 
@@ -100,7 +107,6 @@ def make_ce_step(spec: ModelSpec, cfg: ProxyFLConfig, dp: bool):
         x, y = batch
         return cross_entropy(spec.apply(params, x), y)
 
-    @jax.jit
     def step(params, opt_state, batch, key):
         if dp:
             g, m = dp_gradient(loss, params, batch, key,
@@ -115,20 +121,30 @@ def make_ce_step(spec: ModelSpec, cfg: ProxyFLConfig, dp: bool):
     return step
 
 
+@functools.lru_cache(maxsize=None)
+def make_ce_step(spec: ModelSpec, cfg: ProxyFLConfig, dp: bool):
+    return jax.jit(ce_step_fn(spec, cfg, dp))
+
+
 # ---------------------------------------------------------------------------
-# gossip over heterogeneous client states (simulation backend)
+# gossip over heterogeneous client states (thin wrapper over the engine's
+# mixing rule — see repro.core.engine for the on-device backends)
 
 
-def gossip_proxies(clients: List[ClientState], t: int, cfg: ProxyFLConfig) -> None:
+def gossip_proxies(clients: List[ClientState], t: int, cfg: ProxyFLConfig,
+                   active=None) -> None:
     """Algorithm 1 lines 7-11 (in place). Proxies share one architecture, so
-    they stack into Θ ∈ R^{K×d} and one matmul applies P^(t)."""
+    they stack into Θ ∈ R^{K×d} and one matmul applies P^(t). ``active``
+    drops clients out of the exchange (§3.4)."""
+    from .gossip import mix_matrix
+
     K = len(clients)
     if K <= 1:
         return
     like = clients[0].proxy_params
     thetas = jnp.stack([tree_flatten_vector(c.proxy_params) for c in clients])
     ws = jnp.asarray([c.w for c in clients], thetas.dtype)
-    P = adjacency_matrix(t, K, cfg.topology)
+    P = mix_matrix("pushsum", t, K, cfg.topology, active)
     mixed_t, mixed_w = pushsum_mix(thetas, ws, P)
     unbiased = debias(mixed_t, mixed_w)
     for k, c in enumerate(clients):
@@ -176,18 +192,45 @@ def local_round(client: ClientState, spec_pair, data, key, cfg: ProxyFLConfig
     return {k: float(v) for k, v in last.items()}
 
 
-def proxyfl_round(clients, spec_pairs, datasets, t, key, cfg: ProxyFLConfig):
-    """One full ProxyFL round across all clients: local DML then gossip."""
-    metrics = []
-    for k, (client, pair, data) in enumerate(zip(clients, spec_pairs, datasets)):
-        metrics.append(local_round(client, pair, data, jax.random.fold_in(key, k), cfg))
-    gossip_proxies(clients, t, cfg)
-    return metrics
+def proxyfl_round(clients, spec_pairs, datasets, t, key, cfg: ProxyFLConfig,
+                  active=None):
+    """One full ProxyFL round across all clients: local DML then gossip.
+
+    Thin wrapper over :class:`repro.core.engine.FederationEngine` (loop
+    backend — the one that supports heterogeneous private architectures);
+    mutates the ClientState list in place like the historical driver."""
+    from .engine import dml_engine
+
+    engine = dml_engine(tuple(p for p, _ in spec_pairs), spec_pairs[0][1],
+                        cfg, backend="loop")
+    states = [
+        {"private": {"params": c.private_params, "opt": c.private_opt},
+         "proxy": {"params": c.proxy_params, "opt": c.proxy_opt},
+         "w": jnp.asarray(c.w, jnp.float32)}
+        for c in clients
+    ]
+    engine.attach_accountants([c.accountant for c in clients])
+    states, metrics = engine.run_round(states, list(datasets), t, key,
+                                       active=active)
+    for c, s in zip(clients, states):
+        c.private_params, c.private_opt = s["private"]["params"], s["private"]["opt"]
+        c.proxy_params, c.proxy_opt = s["proxy"]["params"], s["proxy"]["opt"]
+        c.w = float(s["w"])
+    return [{m: float(v[k]) for m, v in metrics.items()}
+            for k in range(len(clients))]
+
+
+@functools.lru_cache(maxsize=None)
+def _eval_apply(spec: ModelSpec):
+    """Jitted ``spec.apply``, hoisted out of the evaluation batch loop (a
+    fresh ``jax.jit`` per batch would re-hash params every call)."""
+    return jax.jit(spec.apply)
 
 
 def evaluate(spec: ModelSpec, params, x, y, batch: int = 512) -> float:
+    apply = _eval_apply(spec)
     correct = 0
     for i in range(0, x.shape[0], batch):
-        logits = jax.jit(spec.apply)(params, x[i : i + batch])
+        logits = apply(params, x[i : i + batch])
         correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
     return correct / x.shape[0]

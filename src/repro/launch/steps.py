@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import InputShape, ModelConfig, ProxyFLConfig
 from ..core.dp import add_gaussian_noise, dp_gradient_chunked, non_dp_gradient
-from ..core.gossip import gossip_shift
+from ..core.gossip import gossip_shift, shard_map_fn
 from ..nn.losses import dml_loss
 from ..nn.model import forward, init_cache, init_model
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
@@ -292,11 +292,10 @@ def make_fl_round_step(cfg_priv: ModelConfig, cfg_proxy: ModelConfig,
         recv_w = jax.lax.ppermute(send_w, "pod", perm)
         return self_w * flat + recv_f, self_w * w + recv_w
 
-    gossip_sm = jax.shard_map(
-        gossip, mesh=mesh,
+    gossip_sm = shard_map_fn(
+        gossip, mesh,
         in_specs=(P("pod"), P("pod")),
-        out_specs=(P("pod"), P("pod")),
-        check_vma=False)
+        out_specs=(P("pod"), P("pod")))
 
     def round_step(stacked_state, stacked_batch, keys):
         # local DML on every client in parallel (clients stacked on "pod")

@@ -6,6 +6,14 @@ exchange (lines 7–11) — across K simulated clients, each holding a
 private model of the selected architecture family and the shared proxy
 architecture, on synthetic non-IID language-modelling data.
 
+Rounds are executed by :class:`repro.core.engine.FederationEngine`
+driving ``make_train_step``: with the default ``--backend vmap`` the whole
+round (scan over local steps × vmap over clients × on-device PushSum
+matmul) is ONE compiled XLA program; ``--backend loop`` keeps the
+per-client dispatch (useful for debugging / heterogeneous experiments).
+``--dropout-rate`` exercises the §3.4 dropout/join scenario: clients sit
+rounds out and the time-varying gossip graph re-knits around them.
+
 On CPU this runs the reduced (smoke) variant of the chosen architecture;
 the full-size configs are exercised through ``dryrun.py``. The default
 ``--preset 100m`` trains a ~100M-parameter private model.
@@ -20,21 +28,20 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import INPUT_SHAPES, get_config, list_archs
-from ..configs.base import DPConfig, InputShape, LayerSpec, ModelConfig, ProxyFLConfig
+from ..configs import list_archs, get_config
+from ..configs.base import DPConfig, LayerSpec, ModelConfig, ProxyFLConfig
 from ..configs.registry import proxy_of, smoke_variant
 from ..core.accountant import PrivacyAccountant
-from ..core.gossip import adjacency_matrix, debias, pushsum_mix
+from ..core.engine import FederationEngine
 from ..data.synthetic import make_lm_data
 from ..nn.losses import cross_entropy
 from ..nn.model import forward
-from ..nn.modules import tree_flatten_vector, tree_size, tree_unflatten_vector
 from .steps import StepOptions, init_train_state, make_train_step
 
 
@@ -87,6 +94,12 @@ def main(argv=None) -> int:
     ap.add_argument("--clip", type=float, default=1.0)
     ap.add_argument("--topology", default="exponential",
                     choices=("exponential", "ring", "full"))
+    ap.add_argument("--backend", default="vmap", choices=("loop", "vmap"),
+                    help="federation engine backend (vmap = one compiled "
+                         "round program; shard_map needs a multi-device "
+                         "mesh, see dryrun.py)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round client dropout probability (§3.4)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if not args.preset and not args.arch:
@@ -98,6 +111,7 @@ def main(argv=None) -> int:
         alpha=args.alpha, beta=args.alpha, n_clients=K, rounds=args.rounds,
         local_steps=args.steps_per_round, lr=args.lr, batch_size=args.batch,
         topology=args.topology, seed=args.seed,
+        dropout_rate=args.dropout_rate,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,
                     noise_multiplier=args.sigma))
     opts = StepOptions(remat=False, accum=1, dp_chunk=args.batch)
@@ -105,7 +119,8 @@ def main(argv=None) -> int:
     key = jax.random.PRNGKey(args.seed)
     print(f"[train] private={cfg.name} ({tree_size_of(cfg)} params approx: "
           f"{cfg.param_counts()['total']/1e6:.1f}M)  proxy={proxy.name} "
-          f"({proxy.param_counts()['total']/1e6:.1f}M)  clients={K}")
+          f"({proxy.param_counts()['total']/1e6:.1f}M)  clients={K} "
+          f"backend={args.backend}")
 
     # non-IID synthetic LM data: each client's stream comes from its own
     # bigram chain (domain = client id); the test stream mixes all domains.
@@ -121,41 +136,36 @@ def main(argv=None) -> int:
         lm_set(jax.random.fold_in(key, 999 + k), max(1, 32 // K), domain=k)
         for k in range(K)])
 
-    states = [init_train_state(jax.random.fold_in(key, k), cfg, proxy, fl, opts)
-              for k in range(K)]
-    accountants = [PrivacyAccountant(args.sigma, args.batch / (64), 1e-5)
-                   for _ in range(K)] if not args.no_dp else None
-    step = jax.jit(make_train_step(cfg, proxy, fl, opts))
+    def sample(toks, kb):
+        idx = jax.random.randint(kb, (args.batch,), 0, toks.shape[0])
+        return {"tokens": toks[idx, :-1], "labels": toks[idx, 1:]}
+
+    engine = FederationEngine(
+        fl, n_clients=K,
+        step_fns=make_train_step(cfg, proxy, fl, opts),
+        init_fns=lambda k2: init_train_state(k2, cfg, proxy, fl, opts),
+        sample_fn=sample, backend=args.backend, mix="pushsum")
+    if not args.no_dp:
+        # DP sample rate q = B / n_local from each client's ACTUAL dataset
+        # size (the accountant's subsampling amplification assumes this).
+        engine.attach_accountants([
+            PrivacyAccountant(args.sigma,
+                              min(1.0, args.batch / data[k].shape[0]), 1e-5)
+            for k in range(K)])
+    state = engine.init_states(key)
 
     for t in range(args.rounds):
         t0 = time.time()
-        metrics = {}
-        for k in range(K):
-            kk = jax.random.fold_in(key, 10_000 + t * K + k)
-            toks = data[k]
-            for s in range(args.steps_per_round):
-                kk, kb, kn = jax.random.split(kk, 3)
-                idx = jax.random.randint(kb, (args.batch,), 0, toks.shape[0])
-                batch = {"tokens": toks[idx, :-1], "labels": toks[idx, 1:]}
-                states[k], metrics = step(states[k], batch, kn)
-                if accountants:
-                    accountants[k].step()
-        # PushSum proxy exchange (simulation backend: Θ ← P^(t) Θ, w ← P w)
-        thetas = jnp.stack([tree_flatten_vector(s["proxy"]["params"])
-                            for s in states])
-        ws = jnp.asarray([float(s["w"]) for s in states], thetas.dtype)
-        Pm = adjacency_matrix(t, K, args.topology)
-        mixed, w2 = pushsum_mix(thetas, ws, Pm)
-        unb = debias(mixed, w2)
-        like = states[0]["proxy"]["params"]
-        for k in range(K):
-            states[k]["proxy"]["params"] = tree_unflatten_vector(unb[k], like)
-            states[k]["w"] = jnp.asarray(float(w2[k]))
-        ppl = evaluate_ppl(states[0]["private"]["params"], cfg, test)
-        eps = accountants[0].epsilon() if accountants else float("nan")
+        rk = jax.random.fold_in(key, 10_000 + t)
+        state, metrics = engine.run_round(state, data, t, rk)
+        ppl = evaluate_ppl(engine.client_params(state, 0, "private"), cfg, test)
+        acc0 = engine.accountants[0]
+        eps = acc0.epsilon() if acc0 is not None else float("nan")
+        n_active = int(np.sum(~np.isnan(metrics["private_loss"])))
         print(f"[round {t+1}/{args.rounds}] "
-              f"private_loss={float(metrics['private_loss']):.4f} "
-              f"proxy_loss={float(metrics['proxy_loss']):.4f} "
+              f"private_loss={np.nanmean(metrics['private_loss']):.4f} "
+              f"proxy_loss={np.nanmean(metrics['proxy_loss']):.4f} "
+              f"active={n_active}/{K} "
               f"client0_test_ppl={ppl:.2f} eps={eps:.3f} "
               f"({time.time()-t0:.1f}s)")
     return 0

@@ -1,0 +1,38 @@
+"""Optional-`hypothesis` shim.
+
+The container image does not guarantee `hypothesis` is installed. Test
+modules import ``given``/``st`` from here instead of from `hypothesis`
+directly: when the real library is present this is a pure re-export; when
+it is absent, ``@given`` turns the property-based test into a cleanly
+skipped test while the rest of the module keeps collecting and running.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    HealthCheck = None
+    settings = None
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    class _Strategy:
+        """Placeholder: any `st.xyz(...)` call returns an inert object."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategy()

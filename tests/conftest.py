@@ -3,12 +3,18 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "repro", max_examples=25, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("repro")
+# `hypothesis` is optional in this container: register the profile only when
+# the library exists; property-based tests skip via tests/_hypothesis_compat.
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "repro", max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+    settings.load_profile("repro")
 
 
 @pytest.fixture(scope="session")

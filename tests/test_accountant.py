@@ -3,7 +3,7 @@ paper's own privacy settings."""
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.accountant import (PrivacyAccountant, epsilon_for,
                                    rdp_sampled_gaussian, rdp_to_eps)

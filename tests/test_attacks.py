@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.attacks import (auc_from_scores, loss_threshold_mia,
                                 per_example_losses)

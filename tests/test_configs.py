@@ -6,6 +6,8 @@ from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.configs.base import LayerSpec
 from repro.configs.registry import proxy_of, smoke_variant
 
+pytestmark = pytest.mark.fast  # pure-config checks, no compilation
+
 ASSIGNED = {
     # arch: (layers, d_model, heads, kv_heads, d_ff, vocab)
     "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),

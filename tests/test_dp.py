@@ -4,7 +4,7 @@ calibration, and equivalence of the three per-example gradient schedules
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.dp import (add_gaussian_noise, clip_by_global_norm,
                            dp_gradient, dp_gradient_chunked, non_dp_gradient)

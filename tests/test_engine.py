@@ -1,0 +1,216 @@
+"""FederationEngine: backend equivalence (loop == vmap on a homogeneous
+cohort), §3.4 dropout/join semantics (inactive clients frozen, PushSum mass
+conserved under time-varying membership), and the unified mixing matrices
+behind every METHODS-table aggregation rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import run_federated
+from repro.core.engine import (FederationEngine, active_mask, dml_engine,
+                               single_model_engine)
+from repro.core.gossip import mix_matrix, pushsum_mix
+from repro.core.protocol import ModelSpec
+from repro.data.synthetic import make_classification_data
+from repro.nn.modules import tree_flatten_vector
+from repro.nn.vision import get_vision_model
+
+K, N_CLASSES, SHAPE = 4, 10, (14, 14, 1)
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_data(key, 1200, SHAPE, N_CLASSES, sep=2.0)
+    return [(x[i * 300:(i + 1) * 300], y[i * 300:(i + 1) * 300])
+            for i in range(K)]
+
+
+@pytest.fixture(scope="module")
+def mlp_spec():
+    vm = get_vision_model("mlp")
+    return ModelSpec("mlp", lambda k: vm.init(k, SHAPE, N_CLASSES), vm.apply)
+
+
+def _flat_clients(states):
+    if isinstance(states, list):  # loop backend
+        return np.stack([np.asarray(tree_flatten_vector(s["proxy"]["params"]))
+                         for s in states])
+    return np.asarray(jax.vmap(tree_flatten_vector)(states["proxy"]["params"]))
+
+
+def _flat_private(states):
+    if isinstance(states, list):
+        return np.stack([np.asarray(tree_flatten_vector(s["private"]["params"]))
+                         for s in states])
+    return np.asarray(
+        jax.vmap(tree_flatten_vector)(states["private"]["params"]))
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence
+
+
+@pytest.mark.fast
+def test_loop_vmap_backends_match(fed_data, mlp_spec):
+    """A vmap-backend round on a homogeneous 4-client cohort must reproduce
+    the loop backend within numerical tolerance — same key schedule, same
+    batches, same DP noise, only the execution strategy differs."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=3,
+                        dp=DPConfig(enabled=True))
+    key = jax.random.PRNGKey(0)
+    results = {}
+    for backend in ("loop", "vmap"):
+        eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend=backend)
+        state = eng.init_states(key)
+        for t in range(cfg.rounds):
+            state, metrics = eng.run_round(
+                state, fed_data, t, jax.random.fold_in(key, 10_000 + t))
+        results[backend] = (_flat_private(state), _flat_clients(state), metrics)
+    np.testing.assert_allclose(results["loop"][0], results["vmap"][0],
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(results["loop"][1], results["vmap"][1],
+                               atol=1e-5, rtol=1e-4)
+    for k in results["loop"][2]:
+        np.testing.assert_allclose(results["loop"][2][k],
+                                   results["vmap"][2][k], atol=1e-4, rtol=1e-3)
+
+
+def test_run_federated_backend_equivalence(fed_data, mlp_spec):
+    """End-to-end: run_federated produces matching final client states on
+    both backends (accuracy history equal up to eval batching)."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=2,
+                        dp=DPConfig(enabled=True))
+    xt, yt = fed_data[0]
+    out = {}
+    for backend in ("loop", "vmap"):
+        res = run_federated("proxyfl", [mlp_spec] * K, mlp_spec, fed_data,
+                            (xt, yt), cfg, backend=backend)
+        out[backend] = np.stack([
+            np.asarray(tree_flatten_vector(c.proxy_params))
+            for c in res["clients"]])
+    np.testing.assert_allclose(out["loop"], out["vmap"], atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.fast
+def test_single_model_mixes_match_loop(fed_data, mlp_spec):
+    """fedavg/avgpush/cwt/regular single-model rounds agree across backends."""
+    xt, yt = fed_data[0]
+    for method in ("fedavg", "avgpush", "cwt", "regular"):
+        cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50,
+                            local_steps=2, dp=DPConfig(enabled=False))
+        outs = []
+        for backend in ("loop", "vmap"):
+            res = run_federated(method, [mlp_spec] * K, mlp_spec, fed_data,
+                                (xt, yt), cfg, backend=backend)
+            outs.append(np.stack([
+                np.asarray(tree_flatten_vector(c.params))
+                for c in res["clients"]]))
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, rtol=1e-4,
+                                   err_msg=method)
+
+
+# ---------------------------------------------------------------------------
+# dropout / join (§3.4)
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("backend", ("loop", "vmap"))
+def test_dropout_mass_conservation(fed_data, mlp_spec, backend):
+    """With clients dropping in/out every round, PushSum stays column-
+    stochastic on the full cohort: total parameter mass and total w are
+    conserved, and an inactive client's state is untouched that round.
+    lr=0 isolates the gossip dynamics from local training."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=4, batch_size=50, local_steps=1,
+                        lr=0.0, dp=DPConfig(enabled=False))
+    key = jax.random.PRNGKey(0)
+    eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                              backend=backend)
+    state = eng.init_states(key)
+    mass0 = _flat_clients(state).sum()
+    masks = [np.array([True, False, True, True]),
+             np.array([False, True, False, True]),
+             None,
+             np.array([True, True, False, False])]
+    for t, act in enumerate(masks):
+        before = _flat_clients(state)
+        state, _ = eng.run_round(state, fed_data, t,
+                                 jax.random.fold_in(key, t), active=act)
+        after = _flat_clients(state)
+        w = np.asarray([np.asarray(s["w"]) for s in eng.export_states(state)])
+        np.testing.assert_allclose(after.sum(), mass0, rtol=1e-5)
+        np.testing.assert_allclose(w.sum(), K, rtol=1e-6)
+        if act is not None:
+            for k in np.where(~act)[0]:
+                np.testing.assert_array_equal(before[k], after[k])
+
+
+def test_dropout_schedule_deterministic():
+    cfg = ProxyFLConfig(n_clients=8, dropout_rate=0.5, seed=11)
+    a = [active_mask(t, 8, cfg) for t in range(5)]
+    b = [active_mask(t, 8, cfg) for t in range(5)]
+    for ma, mb in zip(a, b):
+        np.testing.assert_array_equal(ma, mb)
+        assert ma.sum() >= 1  # min_active floor
+    assert any((m != a[0]).any() for m in a[1:])  # time-varying
+    assert active_mask(0, 8, ProxyFLConfig(n_clients=8)) is None
+
+
+@pytest.mark.fast
+def test_mix_matrices_column_stochastic_with_active():
+    act = np.array([True, False, True, True, False, True])
+    for mix in ("pushsum", "mean", "ring", "none"):
+        for t in range(4):
+            P = mix_matrix(mix, t, 6, "exponential", act if mix != "none" else None)
+            np.testing.assert_allclose(P.sum(axis=0), 1.0, atol=1e-9,
+                                       err_msg=mix)
+            # inactive clients: identity column AND row (no send, no recv)
+            if mix != "none":
+                for k in np.where(~act)[0]:
+                    assert P[k, k] == 1.0 and P[:, k].sum() == 1.0
+                    assert P[k, :].sum() == 1.0
+
+
+def test_cwt_ring_is_pure_permutation():
+    P = mix_matrix("ring", 0, 5, "exponential")
+    assert ((P == 0) | (P == 1)).all() and (P.sum(axis=1) == 1).all()
+    thetas = jnp.arange(5.0)[:, None]
+    mixed, w = pushsum_mix(thetas, jnp.ones(5), P)
+    # client k receives client k-1's model (cyclical weight transfer)
+    np.testing.assert_allclose(np.asarray(mixed)[:, 0], [4., 0., 1., 2., 3.])
+    np.testing.assert_allclose(np.asarray(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend (1-device smoke; K=4 equivalence runs in the forced
+# multi-device subprocess of test_system, if present)
+
+
+def test_shard_map_backend_smoke(fed_data, mlp_spec):
+    mesh = jax.make_mesh((1,), ("clients",))
+    cfg = ProxyFLConfig(n_clients=1, rounds=1, batch_size=50, local_steps=2,
+                        dp=DPConfig(enabled=False))
+    vmap_eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                                   backend="vmap")
+    eng = FederationEngine(
+        cfg, n_clients=1, step_fns=vmap_eng.step_fns[0],
+        init_fns=vmap_eng.init_fns[0], sample_fn=vmap_eng.sample_fn,
+        backend="shard_map", mix="pushsum", mesh=mesh, axis="clients")
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    state, metrics = eng.run_round(state, fed_data[:1], 0, key)
+    assert np.isfinite(metrics["loss"]).all()
+
+
+def test_heterogeneous_requires_loop(fed_data, mlp_spec):
+    vm = get_vision_model("lenet5")
+    other = ModelSpec("lenet5", lambda k: vm.init(k, SHAPE, N_CLASSES),
+                      vm.apply)
+    cfg = ProxyFLConfig(n_clients=2, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    eng = dml_engine((mlp_spec, other), mlp_spec, cfg)  # auto -> loop
+    assert eng.backend == "loop"
+    with pytest.raises(AssertionError):
+        dml_engine((mlp_spec, other), mlp_spec, cfg, backend="vmap")

@@ -5,10 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.gossip import (adjacency_matrix, comm_cost_per_round, debias,
-                               exponential_offsets, gossip_shift, pushsum_mix)
+                               exponential_offsets, gossip_shift, mix_matrix,
+                               pushsum_mix)
+
+pytestmark = pytest.mark.fast  # host-side graph algebra, no model compiles
 
 
 @given(st.integers(0, 40), st.integers(1, 33),
@@ -87,6 +90,44 @@ def test_comm_cost_scaling():
     assert p8 == p64
     assert p8 < comm_cost_per_round("avgpush", 8, mb, pb)
     assert comm_cost_per_round("regular", 8, mb, pb) == 0.0
+
+
+def test_mix_matrix_rules():
+    """Every METHODS-table aggregation is one column-stochastic matrix:
+    mean/ring keep the PushSum weight at exactly 1; pushsum under an active
+    mask leaves inactive clients' columns AND rows at identity."""
+    K = 6
+    act = np.array([True, True, False, True, False, True])
+    for mix in ("pushsum", "mean", "ring", "none"):
+        P = mix_matrix(mix, 2, K, "exponential", act)
+        np.testing.assert_allclose(P.sum(axis=0), 1.0, atol=1e-12)
+        w2 = P @ np.ones(K)
+        np.testing.assert_allclose(w2, 1.0, atol=1e-12)  # uniform in-degree
+        if mix != "none":
+            for k in np.where(~act)[0]:
+                assert P[k, k] == 1.0
+                np.testing.assert_array_equal(P[k, np.arange(K) != k], 0.0)
+
+
+def test_active_permutation_matches_matrix():
+    """The shard_map dropout path (perm over the ACTIVE subset + per-device
+    keep factors) must equal the matrix backend on the same P^(t)."""
+    K, D, t = 5, 3, 0
+    act = [True, False, True, True, False]
+    active_idx = [i for i, a in enumerate(act) if a]
+    A = len(active_idx)
+    thetas = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (K, D)))
+    w = np.ones(K)
+    P = mix_matrix("pushsum", t, K, "exponential", np.asarray(act))
+    ref_t = P @ thetas
+
+    shift = gossip_shift(t, A, "exponential")
+    keep = np.where(act, 0.5, 1.0)[:, None]
+    recv = np.zeros_like(thetas)
+    for p, src in enumerate(active_idx):
+        dst = active_idx[(p + shift) % A]
+        recv[dst] += 0.5 * thetas[src]
+    np.testing.assert_allclose(keep * thetas + recv, ref_t, rtol=1e-6)
 
 
 def test_distributed_backend_matches_simulation():

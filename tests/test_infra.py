@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.data.partition import partition_dirichlet, partition_major

@@ -3,7 +3,7 @@ numerically identical to the naive take_along_axis formulation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.nn.losses import (accuracy, cross_entropy, dml_loss, kl_divergence,
                              macro_accuracy)

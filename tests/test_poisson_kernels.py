@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.dp import dp_gradient, dp_gradient_poisson
 from repro.data.loader import expected_batch, poisson_batch
