@@ -23,6 +23,19 @@ from repro.nn.vision import get_vision_model
 
 FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
 
+
+def _env_int(name: str) -> int:
+    raw = os.environ.get(name, "").strip()
+    try:
+        return int(raw) if raw else 0
+    except ValueError:
+        raise SystemExit(f"{name} must be an integer, got {raw!r}")
+
+
+def _env_flag(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in ("1", "true", "yes",
+                                                        "on")
+
 # synthetic stand-ins for the paper's datasets (offline container): same
 # image geometry, class count and non-IID partition structure
 DATASETS = {
@@ -73,13 +86,27 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   proxy_arch: str = "mlp", alpha: float = 0.5,
                   sigma: float = 1.0, clip: float = 1.0,
                   n_train_factor: float = 1.0,
-                  backend: str = None, dropout_rate: float = 0.0
+                  backend: str = None, dropout_rate: float = 0.0,
+                  checkpoint_dir: str = None, checkpoint_every: int = 0,
+                  resume: bool = None
                   ) -> List[Dict]:
     """``backend`` selects the FederationEngine execution path for every
     figure run ("auto" -> one compiled vmap round program on these
     homogeneous cohorts; override via REPRO_BENCH_BACKEND). ``dropout_rate``
-    turns on the §3.4 per-round dropout/join scenario."""
+    turns on the §3.4 per-round dropout/join scenario.
+
+    ``checkpoint_dir`` makes every (method, seed) run snapshot its complete
+    federation state every ``checkpoint_every`` rounds under
+    ``<dir>/<dataset>/<method>_s<seed>``; with ``resume`` a preempted
+    benchmark restarts mid-run and finishes bit-identically to an
+    uninterrupted one. Env overrides (for figure drivers run as scripts):
+    ``REPRO_BENCH_CKPT_DIR``, ``REPRO_BENCH_CKPT_EVERY``,
+    ``REPRO_BENCH_RESUME``."""
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
+    checkpoint_dir = checkpoint_dir or os.environ.get("REPRO_BENCH_CKPT_DIR")
+    checkpoint_every = checkpoint_every or _env_int("REPRO_BENCH_CKPT_EVERY")
+    if resume is None:
+        resume = _env_flag("REPRO_BENCH_RESUME")
     rows = []
     for method in methods:
         accs, eps_out = [], None
@@ -95,9 +122,12 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 batch_size=min(batch_size, client_data[0][0].shape[0]),
                 seed=seed, dropout_rate=dropout_rate,
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
-            res = run_federated(method, [priv] * n_clients, prox, client_data,
-                                test, cfg, seed=seed, eval_every=rounds,
-                                backend=backend)
+            res = run_federated(
+                method, [priv] * n_clients, prox, client_data, test, cfg,
+                seed=seed, eval_every=rounds, backend=backend,
+                checkpoint_dir=(os.path.join(checkpoint_dir, dataset)
+                                if checkpoint_dir else None),
+                checkpoint_every=checkpoint_every, resume=resume)
             row = res["history"][-1]
             which = "private_acc" if "private_acc" in row else "acc"
             accs.extend(row[which])

@@ -4,6 +4,9 @@ small shared proxy. Canonical FL (FedAvg et al.) cannot do this at all.
 
     PYTHONPATH=src python examples/heterogeneous_archs.py
 """
+import os
+import tempfile
+
 import jax
 import numpy as np
 
@@ -38,8 +41,15 @@ proxy = ModelSpec("proxy-mlp", lambda k: proxy_vm.init(k, IMG, N_CLASSES),
 cfg = ProxyFLConfig(n_clients=K, rounds=5, batch_size=100,
                     dp=DPConfig(enabled=True))
 
+# Heterogeneous cohorts force the per-client `loop` backend — checkpoints
+# are stored per client, so even four DIFFERENT architectures snapshot and
+# resume bit-exactly. The directory is stable across invocations: kill the
+# script mid-run and rerun it to watch the federation pick up where it
+# stopped (a finished run's snapshots just re-evaluate instantly).
+ckpt_dir = os.path.join(tempfile.gettempdir(), "proxyfl_hetero_ckpts")
 fed = run_federated("proxyfl", specs, proxy, client_data, (xt, yt), cfg,
-                    eval_every=cfg.rounds)
+                    eval_every=cfg.rounds, checkpoint_dir=ckpt_dir,
+                    checkpoint_every=2, resume=True)
 solo = {}
 for k, name in enumerate(ARCHS):
     r = run_federated("regular", [specs[k]] * K, specs[k], client_data,

@@ -3,6 +3,11 @@
 #
 #   scripts/ci.sh           # full tier-1 run (ROADMAP verify command)
 #   scripts/ci.sh --fast    # only tests marked @pytest.mark.fast
+#   scripts/ci.sh --smoke   # resume-correctness smoke: 4-client federation,
+#                           # 3 rounds with --checkpoint-every 1, killed
+#                           # after round 2 and resumed; fails unless the
+#                           # final proxy params are bit-identical to an
+#                           # uninterrupted run (loop AND vmap backends)
 #
 # Extra arguments after the mode flag are forwarded to pytest.
 set -euo pipefail
@@ -15,6 +20,12 @@ MARK=""
 if [[ "${1:-}" == "--fast" ]]; then
   MARK="-m fast"
   shift
+elif [[ "${1:-}" == "--smoke" ]]; then
+  shift
+  echo "== smoke: checkpoint/resume bit-identity =="
+  python scripts/resume_smoke.py
+  echo "CI OK"
+  exit 0
 fi
 
 echo "== tier-1: pytest =="

@@ -1,3 +1,55 @@
-from .ckpt import load_checkpoint, save_checkpoint
+"""repro.checkpoint — pytree checkpoints + per-round federation snapshots.
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+Two layers:
+
+* :mod:`repro.checkpoint.ckpt` — generic pytree <-> ``.npz`` serialization.
+  Leaves live under '/'-joined key paths and are restored BY KEY PATH with
+  descriptive missing/unexpected-key errors (never by flatten order).
+* :mod:`repro.checkpoint.federation` — :class:`FederationCheckpointer`,
+  which snapshots COMPLETE federation state every N rounds (per-client
+  engine states incl. optimizer moments, PushSum de-bias weights ``w``, the
+  round counter, the base RNG key, DP accountant step counts, and a config
+  fingerprint) and restores it bit-exactly on any engine backend.
+
+Checkpoint usage
+----------------
+Periodic snapshots + resume around a :class:`FederationEngine` round loop::
+
+    from repro.checkpoint import FederationCheckpointer, config_fingerprint
+
+    ckpt = FederationCheckpointer("ckpts/run0", every=5,
+                                  fingerprint=config_fingerprint(cfg))
+    state = engine.init_states(key)
+    start = 0
+    restored = ckpt.restore_latest(engine, like=state, base_key=key)
+    if restored is not None:                 # fresh start when None
+        state, start = restored              # continue at t = rounds_done
+    for t in range(start, cfg.rounds):
+        state, _ = engine.run_round(state, data, t,
+                                    jax.random.fold_in(key, 10_000 + t))
+        ckpt.maybe_save(engine, state, t, base_key=key)
+
+Or let the drivers do it for you — every entry point threads the same three
+knobs:
+
+* ``repro.core.baselines.run_federated(..., checkpoint_dir=..,
+  checkpoint_every=.., resume=True)``
+* ``python -m repro.launch.train --checkpoint-dir d --checkpoint-every 5
+  --resume``
+* ``benchmarks.common.bench_methods(..., checkpoint_dir=..)`` (env:
+  ``REPRO_BENCH_CKPT_DIR`` / ``REPRO_BENCH_CKPT_EVERY`` /
+  ``REPRO_BENCH_RESUME``)
+
+Resume correctness contract: a run killed after round t and resumed from
+its checkpoint produces bit-identical final proxy parameters and accountant
+epsilon versus the uninterrupted run (CI enforces this via
+``scripts/ci.sh --smoke`` on both the loop and vmap backends). Checkpoints
+are backend-portable: state is stored per client, so a snapshot written by
+the heterogeneous ``loop`` backend restores into a ``vmap``/``shard_map``
+engine (stacking on load) and vice versa (gathering from the mesh on save).
+"""
+from .ckpt import load_checkpoint, manifest_path, save_checkpoint
+from .federation import FederationCheckpointer, config_fingerprint
+
+__all__ = ["FederationCheckpointer", "config_fingerprint",
+           "load_checkpoint", "manifest_path", "save_checkpoint"]

@@ -1,9 +1,12 @@
 """Checkpointing: params/optimizer pytrees <-> .npz + path manifest.
 
 Leaves are stored under '/'-joined key paths so checkpoints are inspectable
-with plain numpy and stable across JAX versions. Round-level federation
-state (client models, de-bias weights, accountant counters) serializes the
-same way.
+with plain numpy and stable across JAX versions. Restoration matches leaves
+BY KEY PATH (never by flatten order): a checkpoint whose key set disagrees
+with the template raises a descriptive error listing the missing and
+unexpected keys instead of silently loading values into the wrong slots.
+Round-level federation state (client models, de-bias weights, accountant
+counters) serializes the same way — see :mod:`repro.checkpoint.federation`.
 """
 from __future__ import annotations
 
@@ -16,14 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _flatten_with_paths(tree) -> Dict[str, Any]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(_path_str(p) for p in path)
-        flat[key] = leaf
-    return flat
-
-
 def _path_str(p) -> str:
     if hasattr(p, "key"):
         return str(p.key)
@@ -32,6 +27,29 @@ def _path_str(p) -> str:
     if hasattr(p, "name"):
         return str(p.name)
     return str(p)
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    """Leaf dict keyed by '/'-joined path; rejects ambiguous (colliding)
+    key paths up front — a collision would otherwise drop a leaf and
+    corrupt whichever restore consumed the checkpoint."""
+    flat: Dict[str, Any] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        if key in flat:
+            raise ValueError(
+                f"pytree produces duplicate checkpoint key path {key!r}; "
+                "rename the colliding nodes before checkpointing")
+        flat[key] = leaf
+    return flat
+
+
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def manifest_path(path: str) -> str:
+    return (path[:-4] if path.endswith(".npz") else path) + ".json"
 
 
 def save_checkpoint(path: str, tree) -> None:
@@ -44,25 +62,47 @@ def save_checkpoint(path: str, tree) -> None:
             # npz has no bf16/fp8 codecs; store widened (lossless into f32)
             a = a.astype(np.float32)
         arrays[k] = a
-    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    np.savez(_npz_path(path), **arrays)
     manifest = {k: {"shape": list(np.shape(v)), "dtype": str(np.asarray(v).dtype)}
                 for k, v in flat.items()}
-    with open((path[:-4] if path.endswith(".npz") else path) + ".json", "w") as f:
+    with open(manifest_path(path), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
 
 
 def load_checkpoint(path: str, like) -> Any:
-    """Restore into the structure of ``like`` (leaf order by key paths)."""
-    npz = np.load(path if path.endswith(".npz") else path + ".npz")
-    flat_like = _flatten_with_paths(like)
-    leaves, treedef = jax.tree_util.tree_flatten(like)
-    keys = list(flat_like.keys())
-    assert len(keys) == len(leaves)
-    restored = []
-    for key, leaf in zip(keys, leaves):
-        arr = npz[key]
-        assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
-        dt = leaf.dtype if hasattr(leaf, "dtype") else None
-        restored.append(jnp.asarray(arr).astype(dt) if dt is not None
-                        else jnp.asarray(arr))
+    """Restore into the structure of ``like``, matching leaves by key path.
+
+    Raises ``KeyError`` when the checkpoint's key set and the template's
+    disagree (listing the missing / unexpected paths) and ``ValueError``
+    on a per-leaf shape mismatch — both conditions previously restored
+    garbage silently when flatten order happened to differ.
+    """
+    pairs, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keyed = {}
+    for p, leaf in pairs:
+        key = "/".join(_path_str(s) for s in p)
+        if key in keyed:
+            raise ValueError(
+                f"restore template produces duplicate key path {key!r}")
+        keyed[key] = leaf
+    with np.load(_npz_path(path)) as npz:
+        have = set(npz.files)
+        missing = sorted(set(keyed) - have)
+        unexpected = sorted(have - set(keyed))
+        if missing or unexpected:
+            raise KeyError(
+                f"checkpoint {_npz_path(path)!r} does not match the restore "
+                f"template: missing keys {missing or 'none'}, "
+                f"unexpected keys {unexpected or 'none'}")
+        restored = []
+        for p, leaf in pairs:
+            key = "/".join(_path_str(s) for s in p)
+            arr = npz[key]
+            if arr.shape != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape {arr.shape}, "
+                    f"template expects {tuple(np.shape(leaf))}")
+            dt = leaf.dtype if hasattr(leaf, "dtype") else None
+            restored.append(jnp.asarray(arr).astype(dt) if dt is not None
+                            else jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, restored)

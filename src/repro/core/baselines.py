@@ -29,6 +29,7 @@ on every backend.
 from __future__ import annotations
 
 import dataclasses
+import os
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.federation import FederationCheckpointer, config_fingerprint
 from ..configs.base import ProxyFLConfig
 from .accountant import PrivacyAccountant
 from .engine import dml_engine, single_model_engine
@@ -75,6 +77,23 @@ def _accountants(cfg: ProxyFLConfig, sizes: Sequence[int]
         cfg.dp.delta) for n in sizes]
 
 
+def _checkpointer(checkpoint_dir, checkpoint_every, method: str,
+                  cfg: ProxyFLConfig, seed: int,
+                  private_specs: Sequence[ModelSpec], proxy_spec: ModelSpec,
+                  K: int) -> Optional[FederationCheckpointer]:
+    """Per-(method, seed) checkpoint directory under ``checkpoint_dir``,
+    fingerprinted (config + model identities) so a resume under a different
+    configuration or architecture refuses."""
+    if not checkpoint_dir:
+        return None
+    fp = config_fingerprint(cfg, method=method, seed=seed, n_clients=K,
+                            private=[s.name for s in private_specs[:K]],
+                            proxy=proxy_spec.name)
+    return FederationCheckpointer(
+        os.path.join(checkpoint_dir, f"{method}_s{seed}"),
+        every=checkpoint_every or 1, fingerprint=fp)
+
+
 def run_federated(
     method: str,
     private_specs: Sequence[ModelSpec],
@@ -88,12 +107,22 @@ def run_federated(
     n_classes: Optional[int] = None,
     eval_proxy: bool = False,
     backend: Optional[str] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
 ) -> Dict:
     """Run ``cfg.rounds`` rounds of ``method``; return history + final state.
 
     For FedAvg/AvgPush/CWT/Regular the client model is ``proxy_spec`` (all
     must share one architecture — the constraint ProxyFL removes). Joint
     pools all client data into one model.
+
+    ``checkpoint_dir`` snapshots complete federation state (client states,
+    de-bias weights, round counter, accountant steps) every
+    ``checkpoint_every`` rounds under ``<dir>/<method>_s<seed>``;
+    ``resume=True`` restarts from the newest snapshot and replays the
+    remaining rounds bit-identically to an uninterrupted run (``history``
+    then only covers the resumed rounds).
     """
     assert method in METHODS, method
     K = len(client_data)
@@ -101,6 +130,8 @@ def run_federated(
     xt, yt = test_data
     history: List[Dict] = []
     backend = _resolve_backend(backend, cfg, client_data)
+    ckpt = _checkpointer(checkpoint_dir, checkpoint_every, method, cfg,
+                         seed, private_specs, proxy_spec, K)
 
     if method in ("proxyfl", "fml"):
         mix = "pushsum" if method == "proxyfl" else "mean"
@@ -109,10 +140,17 @@ def run_federated(
         accs = _accountants(cfg, [d[0].shape[0] for d in client_data])
         engine.attach_accountants(accs)
         state = engine.init_states(key)
+        start = 0
+        if ckpt is not None and resume:
+            restored = ckpt.restore_latest(engine, like=state, base_key=key)
+            if restored is not None:
+                state, start = restored
         data = list(client_data)
-        for t in range(cfg.rounds):
+        for t in range(start, cfg.rounds):
             rk = jax.random.fold_in(key, 10_000 + t)
             state, _ = engine.run_round(state, data, t, rk)
+            if ckpt is not None:
+                ckpt.maybe_save(engine, state, t, base_key=key)
             if (t + 1) % eval_every == 0 or t == cfg.rounds - 1:
                 history.append({
                     "round": t + 1,
@@ -124,6 +162,19 @@ def run_federated(
                         evaluate(proxy_spec,
                                  engine.client_params(state, k, "proxy"),
                                  xt, yt) for k in range(K)]})
+        if not history:
+            # resume landed at (or past) the configured horizon: no rounds
+            # ran, but callers still expect a final evaluation row
+            history.append({
+                "round": start,
+                "private_acc": [
+                    evaluate(private_specs[k],
+                             engine.client_params(state, k, "private"),
+                             xt, yt) for k in range(K)],
+                "proxy_acc": [
+                    evaluate(proxy_spec,
+                             engine.client_params(state, k, "proxy"),
+                             xt, yt) for k in range(K)]})
         clients = [
             ClientState(s["private"]["params"], s["private"]["opt"],
                         s["proxy"]["params"], s["proxy"]["opt"],
@@ -151,15 +202,28 @@ def run_federated(
     accs = _accountants(engine_cfg, [d[0].shape[0] for d in data])
     engine.attach_accountants(accs)
     state = engine.init_states(key)
-    for t in range(engine_cfg.rounds):
+    start = 0
+    if ckpt is not None and resume:
+        restored = ckpt.restore_latest(engine, like=state, base_key=key)
+        if restored is not None:
+            state, start = restored
+    for t in range(start, engine_cfg.rounds):
         rk = jax.random.fold_in(key, 10_000 + t)
         state, _ = engine.run_round(state, data, t, rk)
+        if ckpt is not None:
+            ckpt.maybe_save(engine, state, t, base_key=key)
         if (t + 1) % eval_every == 0 or t == engine_cfg.rounds - 1:
             history.append({
                 "round": t + 1,
                 "acc": [evaluate(proxy_spec,
                                  engine.client_params(state, k, "proxy"),
                                  xt, yt) for k in range(n_eff)]})
+    if not history:
+        history.append({
+            "round": start,
+            "acc": [evaluate(proxy_spec,
+                             engine.client_params(state, k, "proxy"),
+                             xt, yt) for k in range(n_eff)]})
     clients = [SingleModelClient(s["proxy"]["params"], s["proxy"]["opt"],
                                  accs[k])
                for k, s in enumerate(engine.export_states(state))]

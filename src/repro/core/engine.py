@@ -76,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.ckpt import load_checkpoint, save_checkpoint
 from ..configs.base import ProxyFLConfig
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
@@ -121,6 +122,16 @@ def _tree_where(mask_k: jnp.ndarray, new: Dict, old: Dict) -> Dict:
         m = mask_k.reshape((mask_k.shape[0],) + (1,) * (n.ndim - 1))
         return jnp.where(m, n, o)
     return jax.tree_util.tree_map(sel, new, old)
+
+
+def _key_data(key) -> np.ndarray:
+    """Raw uint32 words of a PRNG key (old-style arrays and typed keys);
+    zeros stand for 'no key recorded' in checkpoints."""
+    if key is None:
+        return np.zeros((2,), np.uint32)
+    if hasattr(key, "dtype") and jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return np.asarray(key, np.uint32)
 
 
 class FederationEngine:
@@ -205,6 +216,60 @@ class FederationEngine:
     def attach_accountants(self, accountants: Sequence) -> None:
         assert len(accountants) == self.K
         self.accountants = list(accountants)
+
+    # -- checkpointing -------------------------------------------------------
+
+    def _ckpt_payload(self, state, t: int, base_key) -> Dict:
+        """Backend-portable snapshot tree: per-client states (stacked
+        vmap/shard_map state is gathered off the device mesh by the
+        per-client unstack), the round counter, per-client accountant step
+        counts, and the base RNG key the round keys derive from. The same
+        builder produces the restore template, so save and restore always
+        agree on tree structure."""
+        clients = {f"c{k:04d}": s
+                   for k, s in enumerate(self.export_states(state))}
+        steps = np.asarray([a.steps if a is not None else 0
+                            for a in self.accountants], np.int32)
+        return {"clients": clients,
+                "rounds_done": np.asarray(t + 1, np.int32),
+                "accountant_steps": steps,
+                "base_key": _key_data(base_key),
+                # explicit flag: PRNGKey(0)'s key data is all zeros, so the
+                # key words alone cannot mean "no key recorded"
+                "base_key_set": np.asarray(base_key is not None, np.uint8)}
+
+    def save_state(self, path: str, state, t: int, base_key=None) -> str:
+        """Write a complete-federation snapshot after completed round ``t``
+        (works on all backends; see ``repro.checkpoint.federation``)."""
+        save_checkpoint(path, self._ckpt_payload(state, t, base_key))
+        return path
+
+    def restore_state(self, path: str, like=None, base_key=None
+                      ) -> Tuple[Any, int]:
+        """Bit-exact inverse of :meth:`save_state`; returns ``(state,
+        rounds_done)`` in THIS engine's layout (a loop-backend checkpoint
+        restores fine into a vmap engine and vice versa). ``like`` is a
+        template state with the target tree structure (default: a throwaway
+        ``init_states``). Attached accountants get their step counters
+        back; passing the run's ``base_key`` verifies the checkpoint was
+        written under the same key schedule."""
+        if like is None:
+            like = self.init_states(jax.random.PRNGKey(0))
+        loaded = load_checkpoint(path, self._ckpt_payload(like, 0, None))
+        clients = [loaded["clients"][f"c{k:04d}"] for k in range(self.K)]
+        state = clients if self.backend == "loop" else stack_states(clients)
+        rounds_done = int(loaded["rounds_done"])
+        steps = np.asarray(loaded["accountant_steps"])
+        for k, acc in enumerate(self.accountants):
+            if acc is not None:
+                acc.steps = int(steps[k])
+        saved_key = np.asarray(loaded["base_key"], np.uint32)
+        if base_key is not None and bool(loaded["base_key_set"]) and \
+                not np.array_equal(saved_key, _key_data(base_key)):
+            raise ValueError(
+                f"checkpoint {path!r} was written under a different base RNG "
+                "key; resuming would change the round key schedule")
+        return state, rounds_done
 
     # -- round execution ----------------------------------------------------
 

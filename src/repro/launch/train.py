@@ -18,11 +18,19 @@ On CPU this runs the reduced (smoke) variant of the chosen architecture;
 the full-size configs are exercised through ``dryrun.py``. The default
 ``--preset 100m`` trains a ~100M-parameter private model.
 
+``--checkpoint-dir`` snapshots the complete federation (client states,
+PushSum weights, round counter, DP accountant steps) every
+``--checkpoint-every`` rounds; ``--resume`` restarts a killed run from the
+newest snapshot and replays the remaining rounds bit-identically to an
+uninterrupted run (see ``repro.checkpoint``).
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
         --rounds 3 --steps-per-round 5
     PYTHONPATH=src python -m repro.launch.train --preset 100m --rounds 10
+    PYTHONPATH=src python -m repro.launch.train --preset 100m --rounds 50 \
+        --checkpoint-dir ckpts/run0 --checkpoint-every 5 --resume
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint import FederationCheckpointer, config_fingerprint
 from ..configs import list_archs, get_config
 from ..configs.base import DPConfig, LayerSpec, ModelConfig, ProxyFLConfig
 from ..configs.registry import proxy_of, smoke_variant
@@ -100,6 +109,14 @@ def main(argv=None) -> int:
                          "mesh, see dryrun.py)")
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client dropout probability (§3.4)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot complete federation state here (enables "
+                         "preemption-tolerant runs; see repro.checkpoint)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="rounds between snapshots (with --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the newest snapshot in "
+                         "--checkpoint-dir (bit-identical continuation)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if not args.preset and not args.arch:
@@ -154,10 +171,26 @@ def main(argv=None) -> int:
             for k in range(K)])
     state = engine.init_states(key)
 
-    for t in range(args.rounds):
+    ckpt = None
+    start = 0
+    if args.checkpoint_dir:
+        ckpt = FederationCheckpointer(
+            args.checkpoint_dir, every=args.checkpoint_every,
+            fingerprint=config_fingerprint(
+                fl, arch=cfg.name, proxy=proxy.name, clients=K))
+        if args.resume:
+            restored = ckpt.restore_latest(engine, like=state, base_key=key)
+            if restored is not None:
+                state, start = restored
+                print(f"[train] resumed from {args.checkpoint_dir} at "
+                      f"round {start}")
+
+    for t in range(start, args.rounds):
         t0 = time.time()
         rk = jax.random.fold_in(key, 10_000 + t)
         state, metrics = engine.run_round(state, data, t, rk)
+        if ckpt is not None:
+            ckpt.maybe_save(engine, state, t, base_key=key)
         ppl = evaluate_ppl(engine.client_params(state, 0, "private"), cfg, test)
         acc0 = engine.accountants[0]
         eps = acc0.epsilon() if acc0 is not None else float("nan")

@@ -1,0 +1,303 @@
+"""Federation checkpointing & resumption.
+
+Three layers under test: key-path restore in ``repro.checkpoint.ckpt``
+(missing/unexpected keys must raise, dtypes must round-trip), the
+``FederationEngine.save_state``/``restore_state`` hooks (backend-portable,
+bit-exact, accountant counters restored), and the end-to-end resume
+contract through ``run_federated`` — a run killed after round t and
+resumed from its checkpoint finishes bit-identically to an uninterrupted
+run, including the §3.4 active-mask schedule."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (FederationCheckpointer, config_fingerprint,
+                              load_checkpoint, save_checkpoint)
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.accountant import PrivacyAccountant
+from repro.core.baselines import run_federated
+from repro.core.engine import active_mask, dml_engine
+from repro.core.protocol import ModelSpec
+from repro.data.synthetic import make_classification_data
+from repro.nn.modules import tree_flatten_vector
+from repro.nn.vision import get_vision_model
+from repro.optim import Adam
+
+K, N_CLASSES, SHAPE = 4, 10, (14, 14, 1)
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_data(key, 1200, SHAPE, N_CLASSES, sep=2.0)
+    return [(x[i * 300:(i + 1) * 300], y[i * 300:(i + 1) * 300])
+            for i in range(K)]
+
+
+@pytest.fixture(scope="module")
+def mlp_spec():
+    vm = get_vision_model("mlp")
+    return ModelSpec("mlp", lambda k: vm.init(k, SHAPE, N_CLASSES), vm.apply)
+
+
+def _flat_clients(eng, state):
+    return np.stack([np.asarray(tree_flatten_vector(
+        eng.client_state(state, k)["proxy"]["params"])) for k in range(K)])
+
+
+# ---------------------------------------------------------------------------
+# ckpt.py: key-path restore
+
+
+@pytest.mark.fast
+def test_roundtrip_preserves_dtypes_incl_bf16_and_int(tmp_path):
+    opt = Adam(lr=1e-3, moment_dtype="bfloat16")
+    params = {"w": jnp.linspace(-1, 1, 8, dtype=jnp.bfloat16)}
+    tree = {"params": params, "opt": opt.init(params),
+            "counters": {"steps": jnp.asarray(7, jnp.int32),
+                         "mask": jnp.asarray([True, False]),
+                         "ids": jnp.arange(3, dtype=jnp.uint32)}}
+    p = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(p, tree)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    loaded = load_checkpoint(p, like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@pytest.mark.fast
+def test_load_checkpoint_reports_missing_and_unexpected_keys(tmp_path):
+    p = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(p, {"a": jnp.ones(2), "gone": jnp.ones(3)})
+    with pytest.raises(KeyError) as e:
+        load_checkpoint(p, {"a": jnp.zeros(2), "absent": jnp.zeros(1)})
+    msg = str(e.value)
+    assert "absent" in msg and "gone" in msg  # both directions listed
+
+
+@pytest.mark.fast
+def test_load_checkpoint_shape_mismatch_raises(tmp_path):
+    p = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(p, {"a": jnp.ones((2, 3))})
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(p, {"a": jnp.zeros((3, 2))})
+
+
+@pytest.mark.fast
+def test_load_checkpoint_not_fooled_by_reordered_template(tmp_path):
+    """Restore matches by key path: a template whose flatten order differs
+    from the saved tree's must still land every leaf in the right slot
+    (the old zip(keys, leaves) pairing silently swapped same-shape leaves
+    whenever the orders diverged)."""
+    p = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(p, {"a": jnp.full(3, 1.0), "b": jnp.full(3, 2.0)})
+    # same key set, same shapes — only the insertion order differs
+    loaded = load_checkpoint(p, {"b": jnp.zeros(3), "a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(loaded["b"]), 2.0)
+
+
+# ---------------------------------------------------------------------------
+# engine save_state / restore_state
+
+
+@pytest.mark.fast
+def test_engine_state_roundtrip_bit_exact(tmp_path, fed_data, mlp_spec):
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=2,
+                        dp=DPConfig(enabled=True))
+    key = jax.random.PRNGKey(3)
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    eng.attach_accountants([PrivacyAccountant(1.0, 0.2) for _ in range(K)])
+    state = eng.init_states(key)
+    state, _ = eng.run_round(state, fed_data, 0, key)
+    path = os.path.join(tmp_path, "round_000001")
+    eng.save_state(path, state, 0, base_key=key)
+    for a in eng.accountants:
+        a.steps = 999  # must be overwritten by restore
+    restored, rounds_done = eng.restore_state(
+        path, like=eng.init_states(key), base_key=key)
+    assert rounds_done == 1
+    assert all(a.steps == 2 for a in eng.accountants)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="base RNG key"):
+        eng.restore_state(path, like=eng.init_states(key),
+                          base_key=jax.random.PRNGKey(999))
+    # seed 0's key data is all zeros — it must still count as "recorded"
+    p0 = os.path.join(tmp_path, "seed0")
+    eng.save_state(p0, state, 0, base_key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="base RNG key"):
+        eng.restore_state(p0, like=eng.init_states(key),
+                          base_key=jax.random.PRNGKey(1))
+
+
+def test_checkpoint_is_backend_portable(tmp_path, fed_data, mlp_spec):
+    """A snapshot written by the vmap engine restores into a loop engine
+    (and back) with identical leaves — state is stored per client."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    key = jax.random.PRNGKey(0)
+    veng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    leng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="loop")
+    state, _ = veng.run_round(veng.init_states(key), fed_data, 0, key)
+    path = os.path.join(tmp_path, "snap")
+    veng.save_state(path, state, 0)
+    lstate, done = leng.restore_state(path, like=leng.init_states(key))
+    assert done == 1 and isinstance(lstate, list) and len(lstate) == K
+    np.testing.assert_array_equal(_flat_clients(veng, state),
+                                  _flat_clients(leng, lstate))
+
+
+@pytest.mark.fast
+def test_checkpointer_fingerprint_mismatch_refuses(tmp_path, fed_data,
+                                                   mlp_spec):
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    key = jax.random.PRNGKey(0)
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    state = eng.init_states(key)
+    ck = FederationCheckpointer(str(tmp_path), every=1,
+                                fingerprint=config_fingerprint(cfg))
+    ck.save(eng, state, 0, base_key=key)
+    other = dataclasses.replace(cfg, lr=5e-4)
+    ck2 = FederationCheckpointer(str(tmp_path), every=1,
+                                 fingerprint=config_fingerprint(other))
+    with pytest.raises(ValueError, match="fingerprint"):
+        ck2.restore_latest(eng, like=state)
+    # rounds/backend are excluded: extending the horizon keeps the print
+    assert (config_fingerprint(cfg)
+            == config_fingerprint(dataclasses.replace(cfg, rounds=99)))
+
+
+@pytest.mark.fast
+def test_checkpointer_cadence_latest_and_rotation(tmp_path, fed_data,
+                                                  mlp_spec):
+    cfg = ProxyFLConfig(n_clients=K, rounds=4, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    key = jax.random.PRNGKey(0)
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    state = eng.init_states(key)
+    ck = FederationCheckpointer(str(tmp_path), every=2, keep=1)
+    assert [t for t in range(4) if ck.should_save(t)] == [1, 3]
+    for t in range(4):
+        state, _ = eng.run_round(state, fed_data, t,
+                                 jax.random.fold_in(key, 10_000 + t))
+        ck.maybe_save(eng, state, t, base_key=key)
+    assert ck.saved_rounds() == [4]  # keep=1 rotated round_000002 away
+    assert ck.latest_round() == 4
+    assert ck.restore_latest(eng, like=eng.init_states(key))[1] == 4
+    empty = FederationCheckpointer(os.path.join(str(tmp_path), "void"))
+    assert empty.latest_round() is None
+    assert empty.restore_latest(eng, like=state) is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end resume through run_federated
+
+
+def _run(method, spec, data, cfg, backend, **kw):
+    return run_federated(method, [spec] * K, spec, data, data[0], cfg,
+                         seed=0, eval_every=cfg.rounds, backend=backend, **kw)
+
+
+@pytest.mark.fast
+def test_resume_bit_identical_vmap(tmp_path, fed_data, mlp_spec):
+    """Kill after round 1 of 3, resume, and the final proxy/private params
+    and epsilon match the uninterrupted run EXACTLY (vmap backend, DP on,
+    dropout on — so the active-mask schedule must replay too)."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=3, batch_size=50, local_steps=2,
+                        dropout_rate=0.25, seed=5,
+                        dp=DPConfig(enabled=True))
+    full = _run("proxyfl", mlp_spec, fed_data, cfg, "vmap")
+    d = str(tmp_path)
+    _run("proxyfl", mlp_spec, fed_data, dataclasses.replace(cfg, rounds=1),
+         "vmap", checkpoint_dir=d, checkpoint_every=1)
+    resumed = _run("proxyfl", mlp_spec, fed_data, cfg, "vmap",
+                   checkpoint_dir=d, checkpoint_every=1, resume=True)
+    for role in ("proxy_params", "private_params"):
+        a = np.stack([np.asarray(tree_flatten_vector(getattr(c, role)))
+                      for c in full["clients"]])
+        b = np.stack([np.asarray(tree_flatten_vector(getattr(c, role)))
+                      for c in resumed["clients"]])
+        np.testing.assert_array_equal(a, b, err_msg=role)
+    assert full["epsilon"] == resumed["epsilon"]
+    assert resumed["history"][-1]["round"] == cfg.rounds
+
+
+def test_resume_equivalence_loop_vs_vmap(tmp_path, fed_data, mlp_spec):
+    """Resumed trajectories agree across backends within the same numerical
+    tolerance as uninterrupted loop==vmap equivalence."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=2,
+                        dp=DPConfig(enabled=True))
+    out = {}
+    for backend in ("loop", "vmap"):
+        d = os.path.join(str(tmp_path), backend)
+        _run("proxyfl", mlp_spec, fed_data,
+             dataclasses.replace(cfg, rounds=1), backend,
+             checkpoint_dir=d, checkpoint_every=1)
+        res = _run("proxyfl", mlp_spec, fed_data, cfg, backend,
+                   checkpoint_dir=d, checkpoint_every=1, resume=True)
+        out[backend] = np.stack([
+            np.asarray(tree_flatten_vector(c.proxy_params))
+            for c in res["clients"]])
+    np.testing.assert_allclose(out["loop"], out["vmap"],
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_resume_single_model_method(tmp_path, fed_data, mlp_spec):
+    """The single-model engine path (fedavg) checkpoints and resumes
+    bit-identically too."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=2,
+                        dp=DPConfig(enabled=False))
+    full = _run("fedavg", mlp_spec, fed_data, cfg, "vmap")
+    d = str(tmp_path)
+    _run("fedavg", mlp_spec, fed_data, dataclasses.replace(cfg, rounds=1),
+         "vmap", checkpoint_dir=d, checkpoint_every=1)
+    resumed = _run("fedavg", mlp_spec, fed_data, cfg, "vmap",
+                   checkpoint_dir=d, checkpoint_every=1, resume=True)
+    a = np.stack([np.asarray(tree_flatten_vector(c.params))
+                  for c in full["clients"]])
+    b = np.stack([np.asarray(tree_flatten_vector(c.params))
+                  for c in resumed["clients"]])
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.fast
+def test_resume_of_finished_run_reevaluates(tmp_path, fed_data, mlp_spec):
+    """Resuming a run whose checkpoint already reached cfg.rounds executes
+    zero rounds but still returns a final history row and client states."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    d = str(tmp_path)
+    first = _run("proxyfl", mlp_spec, fed_data, cfg, "vmap",
+                 checkpoint_dir=d, checkpoint_every=1)
+    again = _run("proxyfl", mlp_spec, fed_data, cfg, "vmap",
+                 checkpoint_dir=d, checkpoint_every=1, resume=True)
+    assert again["history"][-1]["round"] == cfg.rounds
+    a = np.stack([np.asarray(tree_flatten_vector(c.proxy_params))
+                  for c in first["clients"]])
+    b = np.stack([np.asarray(tree_flatten_vector(c.proxy_params))
+                  for c in again["clients"]])
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.fast
+def test_active_mask_schedule_survives_restore():
+    """§3.4 dropout masks depend only on (cfg.seed, t) — a resumed run at
+    round t draws the same mask the killed run would have."""
+    cfg = ProxyFLConfig(n_clients=8, dropout_rate=0.4, seed=13)
+    pre_kill = [active_mask(t, 8, cfg) for t in range(6)]
+    # "restart": a fresh process re-derives masks from the config alone
+    resumed_cfg = ProxyFLConfig(n_clients=8, dropout_rate=0.4, seed=13)
+    for t in range(3, 6):
+        np.testing.assert_array_equal(pre_kill[t],
+                                      active_mask(t, 8, resumed_cfg))
