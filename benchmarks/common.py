@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import os
 import time
+import zlib
 from typing import Dict, List, Sequence
 
 import jax
@@ -57,27 +58,64 @@ def spec_of(name: str, shape, n_classes) -> ModelSpec:
     return ModelSpec(name, lambda k: vm.init(k, shape, n_classes), vm.apply)
 
 
+def task_seed_of(dataset: str) -> int:
+    """Process-independent task seed for a named dataset. ``hash()`` on
+    strings is salted per interpreter (PYTHONHASHSEED), so it would give
+    every benchmark process a DIFFERENT synthetic task; crc32 is a stable
+    digest of the name."""
+    return zlib.crc32(dataset.encode()) % 997
+
+
 def federation_data(dataset: str, n_clients: int, seed: int, *,
                     n_train_factor: float = 1.0, p_major=None):
+    """Per-client train sets + shared test set. Dirichlet datasets
+    (kvasir/camelyon) return a RAGGED cohort — true size-skewed client
+    sets, exactly as partitioned (the engine's stacked path pads and
+    mask-samples them) — instead of truncating every client to
+    ``per_client``."""
     d = DATASETS[dataset]
     key = jax.random.PRNGKey(seed)
     per_client = int(d["per_client"] * n_train_factor)
-    n_total = per_client * n_clients * 2
+    pm = p_major if p_major is not None else d.get("p_major")
+    # the p_major partitioner draws each client's quota from a 2x pool;
+    # Dirichlet assigns every sample, so E[client size] == per_client
+    # without over-generating
+    n_total = per_client * n_clients * (2 if pm is not None else 1)
+    task_seed = task_seed_of(dataset)
     x, y = make_classification_data(key, n_total, d["shape"], d["n_classes"],
-                                    sep=d["sep"], task_seed=hash(dataset) % 997)
+                                    sep=d["sep"], task_seed=task_seed)
     xt, yt = make_classification_data(jax.random.fold_in(key, 1),
                                       1000, d["shape"], d["n_classes"],
-                                      sep=d["sep"], task_seed=hash(dataset) % 997)
+                                      sep=d["sep"], task_seed=task_seed)
     rng = np.random.default_rng(seed)
-    pm = p_major if p_major is not None else d.get("p_major")
     if pm is not None:
         idxs = partition_major(rng, np.asarray(y), n_clients, per_client, pm,
                                d["n_classes"])
     else:
+        # full Dirichlet size skew preserved — a RAGGED cohort, no
+        # truncation; the engine's stacked path pads and mask-samples it
         idxs = partition_dirichlet(rng, np.asarray(y), n_clients,
                                    d.get("dirichlet", 0.5))
-        idxs = [i[:per_client] for i in idxs]
+        idxs = _ensure_nonempty(rng, idxs)
     return [(x[i], y[i]) for i in idxs], (xt, yt), d
+
+
+def _ensure_nonempty(rng, idxs):
+    """A Dirichlet draw can leave a client with zero samples, which no
+    backend can sample from — move one index over from the largest client
+    (repeatedly: a single donor pass could itself empty a client)."""
+    idxs = [np.asarray(i) for i in idxs]
+    if sum(len(i) for i in idxs) < len(idxs):
+        raise ValueError("fewer samples than clients — cannot give every "
+                         "client at least one example")
+    while True:
+        empty = [k for k, i in enumerate(idxs) if len(i) == 0]
+        if not empty:
+            return idxs
+        donor = int(np.argmax([len(j) for j in idxs]))
+        take = rng.integers(len(idxs[donor]))
+        idxs[empty[0]] = idxs[donor][take:take + 1]
+        idxs[donor] = np.delete(idxs[donor], take)
 
 
 def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
@@ -109,7 +147,9 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
         resume = _env_flag("REPRO_BENCH_RESUME")
     rows = []
     for method in methods:
-        accs, eps_out = [], None
+        # proxy accuracies accumulate across seeds exactly like ``accs``
+        # (and reset per method — no stale binding leaks between methods)
+        accs, proxy_accs, eps_out = [], [], None
         t0 = time.time()
         for seed in seeds:
             client_data, test, d = federation_data(
@@ -117,9 +157,14 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 n_train_factor=n_train_factor)
             priv = spec_of(private_arch, d["shape"], d["n_classes"])
             prox = spec_of(proxy_arch, d["shape"], d["n_classes"])
+            # clamp to the MEAN client size (== per_client in expectation):
+            # sampling is with-replacement so batch > n_k is fine for small
+            # clients, while clamping to the smallest client would distort
+            # every client's batch and explode epoch-mode step counts
+            mean_n = int(np.mean([dk[0].shape[0] for dk in client_data]))
             cfg = ProxyFLConfig(
                 alpha=alpha, beta=alpha, n_clients=n_clients, rounds=rounds,
-                batch_size=min(batch_size, client_data[0][0].shape[0]),
+                batch_size=max(1, min(batch_size, mean_n)),
                 seed=seed, dropout_rate=dropout_rate,
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
             res = run_federated(
@@ -131,20 +176,26 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
             row = res["history"][-1]
             which = "private_acc" if "private_acc" in row else "acc"
             accs.extend(row[which])
-            if method in ("proxyfl", "fml"):
-                rows_proxy = row.get("proxy_acc")
-            eps_out = res["epsilon"][0]
+            if method in ("proxyfl", "fml") and row.get("proxy_acc") is not None:
+                proxy_accs.extend(row["proxy_acc"])
+            # worst case over clients AND seeds: ragged cohorts give every
+            # client its own sample rate/step count, and each seed its own
+            # partition, so epsilons genuinely differ
+            eps = [e for e in res["epsilon"] if e is not None]
+            if eps:
+                eps_out = max(eps) if eps_out is None else max(eps_out,
+                                                               max(eps))
         rows.append({
             "dataset": dataset, "method": method,
             "acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
             "epsilon": eps_out, "rounds": rounds, "clients": n_clients,
             "dp": dp, "seconds": round(time.time() - t0, 1),
         })
-        if method in ("proxyfl", "fml") and rows_proxy is not None:
+        if proxy_accs:
             rows.append({
                 "dataset": dataset, "method": method + "-proxy",
-                "acc_mean": float(np.mean(rows_proxy)),
-                "acc_std": float(np.std(rows_proxy)),
+                "acc_mean": float(np.mean(proxy_accs)),
+                "acc_std": float(np.std(proxy_accs)),
                 "epsilon": eps_out, "rounds": rounds, "clients": n_clients,
                 "dp": dp, "seconds": 0.0,
             })

@@ -13,7 +13,8 @@ import sys
 import time
 
 from . import (fig3_accuracy, fig4_comm, fig5_ablations, fig6_kvasir,
-               fig11_batchsize, mia_privacy, roofline, table2_histo)
+               fig11_batchsize, fig_ragged, mia_privacy, roofline,
+               table2_histo)
 
 MODULES = {
     "fig3_accuracy": fig3_accuracy,    # Fig. 3 / Fig. 9
@@ -22,6 +23,7 @@ MODULES = {
     "fig6_kvasir": fig6_kvasir,        # Fig. 6
     "table2_histo": table2_histo,      # Fig. 8 / Table 2
     "fig11_batchsize": fig11_batchsize,  # Fig. 11
+    "fig_ragged": fig_ragged,          # beyond-paper: ragged vmap vs loop
     "mia_privacy": mia_privacy,        # beyond-paper: empirical DP check
     "roofline": roofline,              # §Roofline (reads dry-run artifacts)
 }

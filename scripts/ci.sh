@@ -2,7 +2,12 @@
 # Single CI entry point: tier-1 test suite + headless quickstart example.
 #
 #   scripts/ci.sh           # full tier-1 run (ROADMAP verify command)
-#   scripts/ci.sh --fast    # only tests marked @pytest.mark.fast
+#   scripts/ci.sh --fast    # only tests marked @pytest.mark.fast; includes
+#                           # the ragged-cohort smoke (tests/test_ragged.py:
+#                           # Dirichlet size-skewed clients on the vmap
+#                           # backend — padded stacking, masked sampling,
+#                           # loop==vmap equivalence) so every PR exercises
+#                           # the compiled ragged path
 #   scripts/ci.sh --smoke   # resume-correctness smoke: 4-client federation,
 #                           # 3 rounds with --checkpoint-every 1, killed
 #                           # after round 2 and resumed; fails unless the

@@ -21,8 +21,10 @@ why their private models retain much higher utility.
 it returns a per-round history of each client's test accuracy. The engine
 ``backend`` ("loop" | "vmap" | "shard_map") is selectable per call or via
 ``ProxyFLConfig.backend``; "auto" compiles the whole round into one XLA
-program (vmap) whenever the cohort is homogeneous, and falls back to the
-per-client loop for heterogeneous architectures or ragged datasets.
+program (vmap) whenever the cohort is homogeneous — ragged (size-skewed,
+e.g. Dirichlet-partitioned) datasets included, via padding + masked
+sampling — and falls back to the per-client loop only for heterogeneous
+architectures or genuinely incompatible data trees.
 ``ProxyFLConfig.dropout_rate`` makes clients drop in/out per round (§3.4)
 on every backend.
 """
@@ -39,6 +41,7 @@ import numpy as np
 
 from ..checkpoint.federation import FederationCheckpointer, config_fingerprint
 from ..configs.base import ProxyFLConfig
+from ..data.ragged import pad_compatible
 from .accountant import PrivacyAccountant
 from .engine import dml_engine, single_model_engine
 from .protocol import ClientState, ModelSpec, evaluate
@@ -58,12 +61,13 @@ class SingleModelClient:
 
 
 def _resolve_backend(backend, cfg: ProxyFLConfig, client_data) -> str:
+    """Honest ``auto``: ragged (size-skewed) cohorts stay on the compiled
+    stacked path — the engine pads and mask-samples them — and only
+    *genuinely incompatible* per-client trees (different structure, dtypes
+    or trailing dims) fall back to the Python loop."""
     backend = backend or cfg.backend or "auto"
-    if backend == "auto":
-        shapes = {tuple(x.shape for x in jax.tree_util.tree_leaves(d))
-                  for d in client_data}
-        if len(shapes) != 1:
-            return "loop"  # ragged per-client datasets cannot stack
+    if backend == "auto" and not pad_compatible(client_data):
+        return "loop"
     return backend
 
 

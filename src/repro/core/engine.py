@@ -20,8 +20,19 @@ round once, behind three selectable backends:
     ``local_steps`` loop, ``jax.vmap`` batches the K clients, and the
     PushSum exchange runs on-device as a [K,K]×[K,D] matmul on the stacked
     flattened proxies — no per-round ``tree_flatten_vector`` host
-    round-trips and no O(K·steps) Python dispatch. P^(t) and the active
-    mask are runtime *arguments*, so all rounds reuse a single compilation.
+    round-trips and no O(K·steps) Python dispatch. P^(t), the active
+    mask, per-client valid lengths and per-client step counts are runtime
+    *arguments*, so all rounds reuse a single compilation.
+
+    RAGGED cohorts (size-skewed non-IID partitions, e.g. Dirichlet —
+    paper §4.3/4.4) run natively on this path: per-client datasets are
+    padded to the cohort max and stacked (:func:`repro.data.ragged.pad_stack`),
+    the sampler draws batch indices via ``randint(0, n_valid[k])`` so
+    padding is never sampled, and in epoch mode (``local_steps == 0``)
+    each client runs its OWN ``n_k // B`` steps: a per-step mask (composed
+    with the §3.4 ``active`` mask) freezes a client's state and RNG chain
+    once it has exhausted its local epoch, so it sits out the remaining
+    scan iterations bit-exactly.
 
 ``shard_map``
     Same stacked round, but with one client per device of a mesh axis and
@@ -38,8 +49,16 @@ Backend selection guide
 * homogeneous cohort, one host            -> ``vmap``
 * one client per device/pod on a mesh     -> ``shard_map``
 * ``"auto"``                              -> ``vmap`` when client states
-  share one tree structure and per-client datasets have equal shapes,
-  otherwise ``loop``.
+  share one tree structure and the per-client data trees are
+  *pad-compatible* (same structure, dtypes and trailing dims; leading
+  example counts may differ — raggedness is handled by padding + masked
+  sampling), otherwise ``loop``. Only genuinely incompatible trees fall
+  back to the O(K·steps) Python loop. Caveat: in epoch mode
+  (``local_steps == 0``) the stacked scan runs the cohort-MAX step count
+  with exhausted clients masked, so at high size skew the loop backend's
+  exact ``sum(n_k // B)`` steps can be cheaper (CPU especially) — pass
+  ``backend="loop"`` explicitly there; ``benchmarks/fig_ragged.py``
+  quantifies the tradeoff per regime.
 
 Exchange rules (``mix``) are column-stochastic matrices built by
 :func:`repro.core.gossip.mix_matrix`: ``"pushsum"`` (ProxyFL/AvgPush),
@@ -70,6 +89,8 @@ boundary: only proxies ever cross clients.
 from __future__ import annotations
 
 import functools
+import inspect
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -78,6 +99,7 @@ import numpy as np
 
 from ..checkpoint.ckpt import load_checkpoint, save_checkpoint
 from ..configs.base import ProxyFLConfig
+from ..data.ragged import pad_compatible, pad_stack
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
 from .gossip import gossip_shift, mix_matrix, pushsum_gossip_shard, shard_map_fn
@@ -88,6 +110,23 @@ MIXES = ("pushsum", "mean", "ring", "none")
 StepFn = Callable[[Dict, Any, jnp.ndarray], Tuple[Dict, Dict]]
 InitFn = Callable[[jnp.ndarray], Dict]
 SampleFn = Callable[[Any, jnp.ndarray], Any]
+
+
+def _sampler_accepts_n_valid(fn) -> bool:
+    """True when ``fn`` can be called ``fn(data_k, key, n_valid=...)`` —
+    the masked-sampling protocol ragged cohorts need on the stacked path
+    (``n_valid`` bounds the index draw so padding is never sampled). The
+    parameter must be NAMED ``n_valid``: bare third-argument sniffing
+    would silently feed the dataset length into an unrelated parameter of
+    a legacy 3-arg sampler. Samplers without it stay supported for
+    rectangular data."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):  # builtins / C callables: be conservative
+        return False
+    p = sig.parameters.get("n_valid")
+    return p is not None and p.kind in (p.POSITIONAL_OR_KEYWORD,
+                                        p.KEYWORD_ONLY)
 
 
 def active_mask(t: int, n_clients: int, cfg: ProxyFLConfig
@@ -187,9 +226,15 @@ class FederationEngine:
         self.backend = backend
         # donation lets XLA update params/opt in place; CPU only warns
         self._donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._masked_sampler = _sampler_accepts_n_valid(sample_fn)
         self._loop_steps: Dict = {}   # id(step_fn) -> jitted one-step
         self._rounds: Dict = {}       # compile cache: key -> jitted round
-        self._data_cache: Dict = {}   # id(data) -> (ref, stacked)
+        # small keyed LRU: id(data) -> (ref, stacked, n_valid). A single
+        # entry thrashes when two datasets alternate (train/finetune
+        # interleave) — every round would re-pad, re-stack and re-transfer.
+        self._data_cache: "OrderedDict" = OrderedDict()
+        self._data_cache_max = 4
+        self._stack_misses = 0        # observability: cache-miss count
 
     # -- state construction / access ---------------------------------------
 
@@ -279,6 +324,12 @@ class FederationEngine:
         n = jax.tree_util.tree_leaves(data_k)[0].shape[0]
         return max(1, n // self.cfg.batch_size)
 
+    def client_steps(self, data: Sequence) -> np.ndarray:
+        """int32[K] local steps per client this round — constant under
+        ``cfg.local_steps``, per-client epoch length (``n_k // B``) in
+        epoch mode; the source of the stacked backends' step mask."""
+        return np.asarray([self.n_steps(d) for d in data], np.int32)
+
     def run_round(self, state, data: Sequence, t: int, key,
                   active=None) -> Tuple[Any, Dict[str, np.ndarray]]:
         """One full federated round: local steps on every ACTIVE client,
@@ -304,13 +355,26 @@ class FederationEngine:
     def _one_step(self, k: int):
         """(state, data_k, chain_key) -> (state, chain_key, metrics) —
         the same composed body the vmap/shard scan uses, jitted once per
-        DISTINCT step_fn (homogeneous cohorts share one compilation)."""
+        DISTINCT step_fn (homogeneous cohorts share one compilation).
+        Masked samplers get the client's true length here too (the
+        unpadded leading dim — same value the stacked path passes, so the
+        index draws are identical AND a sampler with a required
+        ``n_valid`` parameter works on every backend)."""
         step_fn, sample = self.step_fns[k], self.sample_fn
+        masked = self._masked_sampler
         cached = self._loop_steps.get(id(step_fn))
         if cached is None:
             def one(state, data_k, key):
                 key, kb, kn = jax.random.split(key, 3)
-                batch = sample(data_k, kb)
+                # n_valid is only well-defined when every leaf shares the
+                # example axis; trees with auxiliary leaves keep the
+                # sampler's own default (shape-derived) bound
+                dims = {x.shape[0] for x in jax.tree_util.tree_leaves(data_k)
+                        if getattr(x, "ndim", 0)}
+                if masked and len(dims) == 1:
+                    batch = sample(data_k, kb, n_valid=dims.pop())
+                else:
+                    batch = sample(data_k, kb)
                 state, m = step_fn(state, batch, kn)
                 return state, key, m
 
@@ -347,20 +411,64 @@ class FederationEngine:
                     params=tree_unflatten_vector(unb[k], like))
                 states[k]["w"] = w2[k]
         keys = set().union(*(m.keys() for m in per_client if m is not None))
-        metrics = {kk: np.asarray([float(m[kk]) if m is not None else np.nan
-                                   for m in per_client])
+        # heterogeneous clients may emit different metric keys — absent
+        # entries collate as NaN instead of raising
+        metrics = {kk: np.asarray([float(m[kk]) if m is not None and kk in m
+                                   else np.nan for m in per_client])
                    for kk in sorted(keys)}
         return states, metrics
 
     # -- vmap / shard_map backends ------------------------------------------
 
     def _stack_data(self, data):
-        cached = self._data_cache.get(id(data))
+        """Padded-stacked device copy of ``data`` + per-client valid
+        lengths (device + host) + per-client step counts, memoized in a
+        small keyed LRU (alternating train/finetune datasets each keep
+        their stacked copy instead of thrashing a single slot with a
+        re-stack + re-transfer every round). Compatibility checks and the
+        host-side derived arrays are computed once per dataset, not per
+        round."""
+        ck = id(data)
+        cached = self._data_cache.get(ck)
         if cached is not None and cached[0] is data:
-            return cached[1]
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *data)
-        self._data_cache = {id(data): (data, stacked)}  # hold ref: id stays valid
-        return stacked
+            self._data_cache.move_to_end(ck)
+            return cached[1:]
+        self._stack_misses += 1
+        structs = {jax.tree_util.tree_structure(d) for d in data}
+        shapes = {tuple(x.shape for x in jax.tree_util.tree_leaves(d))
+                  for d in data}
+        if len(structs) == 1 and len(shapes) == 1:
+            # rectangular cohort (identical trees — auxiliary leaves with
+            # their own leading dims included): plain stack, no padding.
+            # n_valid is only well-defined when every leaf shares the
+            # example axis; aux-leaf trees get None and the sampler keeps
+            # its own shape-derived bound.
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *data)
+            dims = {x.shape[0] for x in jax.tree_util.tree_leaves(data[0])
+                    if getattr(x, "ndim", 0)}
+            if len(dims) == 1:
+                n0 = dims.pop()
+                n_valid = jnp.full((len(data),), n0, jnp.int32)
+                lengths = np.full(len(data), n0)
+            else:
+                n_valid, lengths = None, None
+        elif pad_compatible(data):
+            stacked, n_valid = pad_stack(data)
+            lengths = np.asarray(n_valid)
+        else:
+            raise ValueError(
+                "vmap/shard_map backends need identical per-client data "
+                "trees or pad-compatible ones (one structure, equal dtypes "
+                "and trailing dims; ragged LEADING dims are fine — they "
+                "are padded and mask-sampled); use backend='loop' for "
+                "genuinely incompatible trees")
+        steps = self.client_steps(data)
+        entry = (data, stacked, n_valid, lengths, steps)  # ref keeps id valid
+        self._data_cache[ck] = entry
+        self._data_cache.move_to_end(ck)
+        while len(self._data_cache) > self._data_cache_max:
+            self._data_cache.popitem(last=False)
+        return entry[1:]
 
     def _mix_topology(self):
         """(graph topology, self-weight) realizing ``self.mix`` — mean is
@@ -372,32 +480,61 @@ class FederationEngine:
             "none": (None, None),
         }[self.mix]
 
-    def _build_round(self, n_steps: int, mix_op):
-        """One jitted program for the WHOLE round. ``mix_op(flat, w, P) ->
+    def _build_round(self, n_steps: int, mix_op, step_masked: bool = False,
+                     pass_n_valid: bool = True):
+        """One jitted program for the WHOLE round (``n_steps`` = the scan
+        length, i.e. the cohort-max step count). ``mix_op(flat, w, P) ->
         (mixed, w2)`` is the only backend difference: a [K,K] matmul on the
         stacked proxies (vmap — P is a runtime arg, so every round reuses
         one compilation) or a ppermute collective (shard_map — the schedule
-        is baked in, P is unused). ``mix_op=None`` skips the exchange."""
+        is baked in, P is unused). ``mix_op=None`` skips the exchange.
+
+        Raggedness is handled by two runtime arguments: ``n_valid`` bounds
+        the sampler's index draw (padding is never sampled), and — only
+        when ``step_masked`` (trace-time static: per-client step counts
+        actually differ, i.e. epoch mode on a size-skewed cohort) — the
+        ``steps`` array composes with the §3.4 ``active`` mask into a
+        per-scan-iteration ``live`` mask: once client k has run its
+        ``steps[k]`` local steps its state AND its RNG chain freeze, so it
+        sits out the rest of the scan without perturbing either. Uniform-
+        step rounds skip the two per-step full-state selects entirely
+        (inactive clients are reverted once, after the scan, exactly as
+        before), so the common fixed-``local_steps`` configuration pays
+        nothing for ragged support."""
         step_fn, sample, K = self.step_fns[0], self.sample_fn, self.K
+        if self._masked_sampler and pass_n_valid:
+            def one(state, data_k, nv_k, key):
+                key, kb, kn = jax.random.split(key, 3)
+                batch = sample(data_k, kb, n_valid=nv_k)
+                state, m = step_fn(state, batch, kn)
+                return state, key, m
+        else:
+            def one(state, data_k, nv_k, key):
+                key, kb, kn = jax.random.split(key, 3)
+                batch = sample(data_k, kb)
+                state, m = step_fn(state, batch, kn)
+                return state, key, m
 
-        def one(state, data_k, key):
-            key, kb, kn = jax.random.split(key, 3)
-            batch = sample(data_k, kb)
-            state, m = step_fn(state, batch, kn)
-            return state, key, m
-
-        def round_fn(stacked, data, P, act, key):
+        def round_fn(stacked, data, n_valid, steps, P, act, key):
             keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
                 jnp.arange(K, dtype=jnp.uint32))
 
-            def body(carry, _):
+            def body(carry, i):
                 st, ks = carry
-                st2, ks2, m = jax.vmap(one)(st, data, ks)
+                st2, ks2, m = jax.vmap(one)(st, data, n_valid, ks)
+                if step_masked:
+                    live = act & (i < steps)
+                    st2 = _tree_where(live, st2, st)  # exhausted/inactive:
+                    ks2 = _tree_where(live, ks2, ks)  # state + RNG frozen
                 return (st2, ks2), m
 
             (trained, _), ms = jax.lax.scan(
-                body, (stacked, keys), None, length=n_steps)
-            last = jax.tree_util.tree_map(lambda x: x[-1], ms)
+                body, (stacked, keys), jnp.arange(n_steps, dtype=jnp.int32))
+            # each client's LAST EXECUTED step's metrics (matches the loop
+            # backend); inactive clients report NaN
+            idx = jnp.clip(steps - 1, 0, n_steps - 1)
+            last = jax.tree_util.tree_map(
+                lambda x: x[idx, jnp.arange(K)], ms)
             last = {k: jnp.where(act, v, jnp.nan) for k, v in last.items()}
             trained = _tree_where(act, trained, stacked)  # dropouts keep state
             if mix_op is not None:
@@ -428,24 +565,33 @@ class FederationEngine:
         return lambda flat, w, P: gossip_sm(flat, w)
 
     def _round_stacked(self, stacked, data, t, key, act):
-        shapes = {tuple(x.shape for x in jax.tree_util.tree_leaves(d))
-                  for d in data}
-        if len(shapes) != 1:
+        data_s, n_valid, lengths, steps_arr = self._stack_data(data)
+        if lengths is not None and (lengths != lengths[0]).any() \
+                and not self._masked_sampler:
             raise ValueError(
-                "vmap/shard_map backends need identical per-client data "
-                f"shapes (got {shapes}); use backend='loop' for ragged data")
-        data_s = self._stack_data(data)
-        n_steps = self.n_steps(data[0])
+                "ragged per-client datasets on the stacked path need a "
+                "masked sampler: sample_fn must accept (data_k, key, "
+                "n_valid) so padding is never drawn (see "
+                "repro.core.engine.classifier_sampler)")
+        pass_nv = n_valid is not None
+        if n_valid is None:  # aux-leaf rectangular tree: dummy, never read
+            n_valid = jnp.zeros((self.K,), jnp.int32)
+        n_steps = int(steps_arr.max())
+        # trace-time static: per-step state/RNG masking is only needed when
+        # clients genuinely run different step counts (epoch mode on a
+        # size-skewed cohort); uniform rounds keep the mask-free body
+        step_masked = bool((steps_arr != steps_arr[0]).any())
+        steps_dev = jnp.asarray(steps_arr)
         act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
         mixing = self.mix != "none" and self.K > 1
         P = jnp.zeros((0,))  # placeholder when no matmul mix runs
         if self.backend == "vmap":
-            rkey = ("vmap", n_steps)
+            rkey = ("vmap", n_steps, step_masked, pass_nv)
             if rkey not in self._rounds:
                 matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,
                                              P.astype(w.dtype) @ w)
                 self._rounds[rkey] = self._build_round(
-                    n_steps, matmul if mixing else None)
+                    n_steps, matmul if mixing else None, step_masked, pass_nv)
             if mixing:
                 P = jnp.asarray(
                     mix_matrix(self.mix, t, self.K, self.cfg.topology, act),
@@ -457,11 +603,15 @@ class FederationEngine:
             # (mix-mapped) shift and the membership pattern
             shift = gossip_shift(t, A, topo) if mixing else None
             act_key = None if act is None else tuple(bool(a) for a in act)
-            rkey = ("shard", n_steps, shift, act_key, self.mix)
+            rkey = ("shard", n_steps, shift, act_key, self.mix, step_masked,
+                    pass_nv)
             if rkey not in self._rounds:
                 self._rounds[rkey] = self._build_round(
-                    n_steps, self._shard_mix_op(t, act_key) if mixing else None)
-        stacked, last = self._rounds[rkey](stacked, data_s, P, act_arr, key)
+                    n_steps,
+                    self._shard_mix_op(t, act_key) if mixing else None,
+                    step_masked, pass_nv)
+        stacked, last = self._rounds[rkey](
+            stacked, data_s, n_valid, steps_dev, P, act_arr, key)
         metrics = {k: np.asarray(v) for k, v in last.items()}
         return stacked, metrics
 
@@ -472,11 +622,18 @@ class FederationEngine:
 
 def classifier_sampler(batch_size: int) -> SampleFn:
     """Uniform-with-replacement batch draw from (x, y) — the historical
-    client sampling used by ``local_round``/``_ce_local_round``."""
+    client sampling used by ``local_round``/``_ce_local_round``.
 
-    def sample(data_k, kb):
+    Masked: on the stacked (padded) path the engine passes the client's
+    true length ``n_valid`` and indices are drawn ``randint(0, n_valid)``,
+    so padding rows are never sampled. Without it (loop backend, where the
+    data is unpadded) the bound is ``x.shape[0]`` — the same value, so
+    loop and vmap draw identical batches on ragged cohorts."""
+
+    def sample(data_k, kb, n_valid=None):
         x, y = data_k
-        idx = jax.random.randint(kb, (batch_size,), 0, x.shape[0])
+        hi = x.shape[0] if n_valid is None else n_valid
+        idx = jax.random.randint(kb, (batch_size,), 0, hi)
         return (x[idx], y[idx])
 
     return sample
@@ -540,7 +697,10 @@ def dml_engine(private_specs: Tuple, proxy_spec, cfg: ProxyFLConfig,
                backend: str = "auto", mix: str = "pushsum"
                ) -> FederationEngine:
     """Engine for the two-model (private+proxy DML) family: ProxyFL
-    (mix="pushsum") and FML (mix="mean"). A small LRU lets repeated
+    (mix="pushsum") and FML (mix="mean"). ``backend="auto"`` picks vmap
+    for homogeneous cohorts — including ragged (size-skewed) datasets,
+    which the stacked path pads and mask-samples — and loop only for
+    heterogeneous private architectures. A small LRU lets repeated
     federations with the same specs reuse compiled round programs without
     pinning every sweep configuration's engine (and its device-resident
     stacked data) in memory forever."""

@@ -1,5 +1,6 @@
 from .loader import sample_batch, steps_per_epoch
 from .partition import partition_dirichlet, partition_major
+from .ragged import client_lengths, pad_compatible, pad_stack
 from .synthetic import lm_examples, make_classification_data, make_lm_data
 
 __all__ = [
@@ -7,6 +8,9 @@ __all__ = [
     "steps_per_epoch",
     "partition_dirichlet",
     "partition_major",
+    "client_lengths",
+    "pad_compatible",
+    "pad_stack",
     "lm_examples",
     "make_classification_data",
     "make_lm_data",

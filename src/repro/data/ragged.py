@@ -1,0 +1,106 @@
+"""Padded stacking for ragged (size-skewed) federated cohorts.
+
+The paper's non-IID settings (§4.3/4.4 Dirichlet partitions for Kvasir and
+the Camelyon histology task) give every client a *different* number of
+local examples, but the engine's compiled vmap/shard_map round wants one
+rectangular ``[K, N, ...]`` stack. This module bridges the two:
+
+* :func:`pad_compatible` — can a cohort's per-client data pytrees be
+  stacked at all?  True iff every client has the same tree structure and
+  every leaf agrees on dtype and trailing dims; ONLY the leading (example
+  count) dim may differ. Anything else — different architectures' feature
+  shapes, extra keys — is genuinely incompatible and belongs on the loop
+  backend.
+* :func:`client_lengths` — per-client example counts (the leading dim all
+  of a client's leaves must share).
+* :func:`pad_stack` — pad every leaf along axis 0 to the cohort max and
+  stack into ``[K, N_max, ...]``, returning ``(stacked, n_valid)`` with
+  ``n_valid: int32[K]`` the true per-client lengths.
+
+Padding semantics
+-----------------
+Rows ``n_valid[k]:`` of client ``k``'s slice are padding (``fill`` value,
+0 by default). Padding is *inert by construction*, not by value: samplers
+draw batch indices via ``randint(0, n_valid[k])`` so a padded row is never
+selected, and per-client step counts are derived from ``n_valid`` — so the
+fill value never reaches a gradient. The engine's state (params, optimizer
+moments, PushSum weights) contains no padding; checkpoints of a federation
+running on padded data are byte-identical in layout to the rectangular
+case and round-trip bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def client_lengths(data: Sequence[Any]) -> np.ndarray:
+    """int64[K] per-client example counts.
+
+    Every leaf of one client's pytree must share the leading dim (that is
+    what "the client holds n_k examples" means); raises otherwise.
+    """
+    out = []
+    for k, d in enumerate(data):
+        leaves = jax.tree_util.tree_leaves(d)
+        if not leaves:
+            raise ValueError(f"client {k} has an empty data pytree")
+        ns = {x.shape[0] if getattr(x, "ndim", 0) else None for x in leaves}
+        if len(ns) != 1 or None in ns:
+            raise ValueError(
+                f"client {k}'s leaves disagree on the leading (example) "
+                f"dim: {sorted(x.shape for x in leaves)}")
+        out.append(leaves[0].shape[0])
+    return np.asarray(out, np.int64)
+
+
+def pad_compatible(data: Sequence[Any]) -> bool:
+    """True iff the cohort can run on the stacked (vmap/shard_map) path:
+    one shared tree structure, and each leaf position agrees on dtype and
+    trailing dims across clients (leading dims are free to differ)."""
+    if len(data) == 0:
+        return False
+    try:
+        structs = {jax.tree_util.tree_structure(d) for d in data}
+        if len(structs) != 1:
+            return False
+        client_lengths(data)  # consistent leading dim within each client
+        sigs = {
+            tuple((x.dtype, x.shape[1:])
+                  for x in jax.tree_util.tree_leaves(d))
+            for d in data}
+        return len(sigs) == 1
+    except (ValueError, AttributeError):
+        return False
+
+
+def pad_stack(data: Sequence[Any], fill: float = 0
+              ) -> Tuple[Any, jnp.ndarray]:
+    """Stack a (possibly ragged) cohort into one ``[K, N_max, ...]`` pytree.
+
+    Returns ``(stacked, n_valid)``; ``n_valid`` is ``int32[K]``. For an
+    already-rectangular cohort this is exactly ``tree_map(stack)`` (no
+    padding rows, ``n_valid`` constant). ``fill`` sets the padding value —
+    it must never be read (see module docstring), so tests pad with NaN to
+    prove the sampler masks correctly.
+    """
+    n_valid = client_lengths(data)
+    if (n_valid <= 0).any():
+        raise ValueError(
+            "clients with zero examples cannot be sampled: "
+            f"per-client sizes {n_valid.tolist()}")
+    n_max = int(n_valid.max())
+
+    def pad(x):
+        short = n_max - x.shape[0]
+        if short == 0:
+            return x
+        return jnp.pad(x, [(0, short)] + [(0, 0)] * (x.ndim - 1),
+                       constant_values=fill)
+
+    padded = [jax.tree_util.tree_map(pad, d) for d in data]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    return stacked, jnp.asarray(n_valid, jnp.int32)

@@ -109,6 +109,10 @@ def main(argv=None) -> int:
                          "mesh, see dryrun.py)")
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client dropout probability (§3.4)")
+    ap.add_argument("--size-skew", type=float, default=0.0,
+                    help="per-client corpus size skew in [0, 1): client k "
+                         "holds ~64*(1-skew)^k sequences, a ragged cohort "
+                         "that exercises the padded/masked vmap path")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="snapshot complete federation state here (enables "
                          "preemption-tolerant runs; see repro.checkpoint)")
@@ -146,15 +150,20 @@ def main(argv=None) -> int:
         stream = make_lm_data(k2, n_seqs * (args.seq + 1), v, domain=domain)
         return stream.reshape(n_seqs, args.seq + 1)
 
+    n_seqs = [max(args.batch, int(round(64 * (1.0 - args.size_skew) ** k)))
+              for k in range(K)]
     data: List[jnp.ndarray] = [
-        lm_set(jax.random.fold_in(key, 100 + k), 64, domain=k)
+        lm_set(jax.random.fold_in(key, 100 + k), n_seqs[k], domain=k)
         for k in range(K)]
     test = jnp.concatenate([
         lm_set(jax.random.fold_in(key, 999 + k), max(1, 32 // K), domain=k)
         for k in range(K)])
 
-    def sample(toks, kb):
-        idx = jax.random.randint(kb, (args.batch,), 0, toks.shape[0])
+    def sample(toks, kb, n_valid=None):
+        # masked-sampler protocol: ragged per-client corpora on the vmap
+        # backend pass the true sequence count so padding is never drawn
+        hi = toks.shape[0] if n_valid is None else n_valid
+        idx = jax.random.randint(kb, (args.batch,), 0, hi)
         return {"tokens": toks[idx, :-1], "labels": toks[idx, 1:]}
 
     engine = FederationEngine(
@@ -177,7 +186,10 @@ def main(argv=None) -> int:
         ckpt = FederationCheckpointer(
             args.checkpoint_dir, every=args.checkpoint_every,
             fingerprint=config_fingerprint(
-                fl, arch=cfg.name, proxy=proxy.name, clients=K))
+                fl, arch=cfg.name, proxy=proxy.name, clients=K,
+                # data-shaping flag: resuming under a different skew would
+                # silently continue on a different cohort
+                size_skew=args.size_skew))
         if args.resume:
             restored = ckpt.restore_latest(engine, like=state, base_key=key)
             if restored is not None:
@@ -192,8 +204,10 @@ def main(argv=None) -> int:
         if ckpt is not None:
             ckpt.maybe_save(engine, state, t, base_key=key)
         ppl = evaluate_ppl(engine.client_params(state, 0, "private"), cfg, test)
-        acc0 = engine.accountants[0]
-        eps = acc0.epsilon() if acc0 is not None else float("nan")
+        # worst case over clients: under --size-skew the smallest client has
+        # the largest sample rate and spends epsilon fastest
+        eps = max((a.epsilon() for a in engine.accountants if a is not None),
+                  default=float("nan"))
         n_active = int(np.sum(~np.isnan(metrics["private_loss"])))
         print(f"[round {t+1}/{args.rounds}] "
               f"private_loss={np.nanmean(metrics['private_loss']):.4f} "

@@ -1,0 +1,109 @@
+"""Benchmark-harness regressions: process-independent synthetic task seeds
+(crc32, not salted ``hash()``), ragged Dirichlet federation_data (no
+truncation, disjoint, nonempty), and per-method proxy-accuracy aggregation
+across seeds in ``bench_methods``."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import benchmarks.common as common
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_task_seed_is_process_independent():
+    """``hash(str)`` is salted per interpreter: two processes with
+    different PYTHONHASHSEED must still agree on the task seed, or every
+    benchmark process trains on a DIFFERENT synthetic dataset."""
+    code = ("import sys; sys.path[:0] = ['src', '.'];"
+            "from benchmarks.common import task_seed_of;"
+            "print(task_seed_of('kvasir'), task_seed_of('camelyon'))")
+    outs = []
+    for hashseed in ("0", "4242"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed, JAX_PLATFORMS="cpu")
+        r = subprocess.run([sys.executable, "-c", code], cwd=REPO, env=env,
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout.strip())
+    assert outs[0] == outs[1], f"task seed depends on hash salt: {outs}"
+    assert outs[0] == (f"{common.task_seed_of('kvasir')} "
+                       f"{common.task_seed_of('camelyon')}")
+
+
+@pytest.mark.fast
+def test_federation_data_dirichlet_is_ragged_untruncated():
+    data, (xt, yt), d = common.federation_data("kvasir", 4, seed=0,
+                                               n_train_factor=0.1)
+    sizes = [dk[0].shape[0] for dk in data]
+    per_client = int(d["per_client"] * 0.1)
+    assert sum(sizes) == per_client * 4      # every partitioned sample kept
+    assert len(set(sizes)) > 1               # genuinely size-skewed
+    assert min(sizes) >= 1                   # sampleable on every backend
+    for dk in data:
+        assert dk[0].shape[1:] == d["shape"]
+
+
+@pytest.mark.fast
+def test_ensure_nonempty_moves_sample_from_largest():
+    rng = np.random.default_rng(0)
+    idxs = [np.arange(10), np.array([], np.int64), np.arange(10, 13)]
+    fixed = common._ensure_nonempty(rng, idxs)
+    allv = np.concatenate(fixed)
+    assert all(len(i) >= 1 for i in fixed)
+    assert sorted(allv.tolist()) == list(range(13))  # nothing lost or duped
+
+
+@pytest.mark.fast
+def test_ensure_nonempty_does_not_reempty_donors():
+    """Donating must not hollow out an earlier client: [[5], [], []] needs
+    repeated passes, not one forward sweep."""
+    rng = np.random.default_rng(0)
+    idxs = [np.array([5]), np.array([], np.int64), np.array([], np.int64)]
+    with pytest.raises(ValueError, match="fewer samples than clients"):
+        common._ensure_nonempty(rng, idxs)
+    idxs = [np.array([5, 6, 7]), np.array([], np.int64),
+            np.array([], np.int64)]
+    fixed = common._ensure_nonempty(rng, idxs)
+    assert all(len(i) >= 1 for i in fixed)
+    assert sorted(np.concatenate(fixed).tolist()) == [5, 6, 7]
+
+
+@pytest.mark.fast
+def test_bench_methods_aggregates_proxy_acc_across_seeds(monkeypatch):
+    """The ``-proxy`` row must average over ALL seeds (the old code kept
+    only the last seed's value), and must not leak into later methods."""
+    def fake_federation_data(dataset, n_clients, seed, **kw):
+        x = jnp.zeros((6, 2, 2, 1))
+        y = jnp.zeros((6,), jnp.int32)
+        return ([(x, y)] * n_clients, (x, y),
+                {"shape": (2, 2, 1), "n_classes": 2})
+
+    def fake_run_federated(method, specs, prox, client_data, test, cfg,
+                           **kw):
+        seed = kw.get("seed", 0)
+        if method in ("proxyfl", "fml"):
+            row = {"round": 1, "private_acc": [0.5 + seed],
+                   "proxy_acc": [0.1 * (seed + 1)]}
+        else:
+            row = {"round": 1, "acc": [0.3]}
+        # seed 0 holds the worst (largest) per-client epsilon
+        return {"history": [row], "epsilon": [9.0 - seed, 3.0],
+                "clients": []}
+
+    monkeypatch.setattr(common, "federation_data", fake_federation_data)
+    monkeypatch.setattr(common, "run_federated", fake_run_federated)
+    rows = common.bench_methods("mnist", ("proxyfl", "fedavg"), n_clients=2,
+                                rounds=1, seeds=(0, 1), dp=False)
+    by_method = {r["method"]: r for r in rows}
+    # mean over seeds {0.1, 0.2}, not the last seed's 0.2
+    assert by_method["proxyfl-proxy"]["acc_mean"] == pytest.approx(0.15)
+    assert by_method["proxyfl"]["acc_mean"] == pytest.approx(1.0)
+    assert "fedavg-proxy" not in by_method  # no stale cross-method leak
+    assert set(by_method) == {"proxyfl", "proxyfl-proxy", "fedavg"}
+    # epsilon: worst case over clients AND seeds (9.0 from seed 0), not
+    # the last seed's value
+    assert by_method["proxyfl"]["epsilon"] == pytest.approx(9.0)

@@ -245,6 +245,43 @@ def test_save_restore_midrun_keeps_backend_equivalence(tmp_path, fed_data,
                                atol=1e-5, rtol=1e-4)
 
 
+@pytest.mark.fast
+def test_loop_metrics_collate_heterogeneous_keys(fed_data):
+    """Two architectures emitting DIFFERENT metric keys must collate to a
+    union of keys with NaN fill, not raise KeyError (loop backend)."""
+    def init(key):
+        return {"proxy": {"params": {"a": jnp.zeros(3)}, "opt": ()},
+                "w": jnp.ones((), jnp.float32)}
+
+    def step_a(state, batch, key):
+        return state, {"loss": jnp.float32(1.0), "aux_a": jnp.float32(2.0)}
+
+    def step_b(state, batch, key):
+        return state, {"loss": jnp.float32(3.0), "aux_b": jnp.float32(4.0)}
+
+    cfg = ProxyFLConfig(n_clients=2, rounds=1, batch_size=4, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    eng = FederationEngine(cfg, n_clients=2, step_fns=[step_a, step_b],
+                           init_fns=[init, init],
+                           sample_fn=lambda d, k, n_valid=None: d,
+                           backend="loop", mix="none")
+    state = eng.init_states(jax.random.PRNGKey(0))
+    _, metrics = eng.run_round(state, [fed_data[0], fed_data[1]], 0,
+                               jax.random.PRNGKey(1))
+    assert set(metrics) == {"loss", "aux_a", "aux_b"}
+    np.testing.assert_allclose(metrics["loss"], [1.0, 3.0])
+    np.testing.assert_allclose(metrics["aux_a"], [2.0, np.nan])
+    np.testing.assert_allclose(metrics["aux_b"], [np.nan, 4.0])
+    # same union semantics when one client sits the round out: the union
+    # covers ACTIVE clients' keys, the dropout's slots are NaN
+    _, metrics = eng.run_round(state, [fed_data[0], fed_data[1]], 1,
+                               jax.random.PRNGKey(2),
+                               active=np.array([True, False]))
+    assert set(metrics) == {"loss", "aux_a"}
+    np.testing.assert_allclose(metrics["loss"], [1.0, np.nan])
+    np.testing.assert_allclose(metrics["aux_a"], [2.0, np.nan])
+
+
 def test_heterogeneous_requires_loop(fed_data, mlp_spec):
     vm = get_vision_model("lenet5")
     other = ModelSpec("lenet5", lambda k: vm.init(k, SHAPE, N_CLASSES),

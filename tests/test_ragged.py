@@ -1,0 +1,416 @@
+"""Ragged (size-skewed) cohorts on the compiled stacked path: padded
+stacking semantics, masked sampling (padding never drawn), per-client step
+masks, loop==vmap equivalence on a Dirichlet cohort, padded-checkpoint
+bit-identity, the keyed stacked-data LRU, and the honest ``auto`` backend
+selector. Partition property tests (disjointness, bounds) ride along."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+
+import repro.core.engine as engine_mod
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import _resolve_backend, run_federated
+from repro.core.engine import classifier_sampler, dml_engine
+from repro.core.protocol import ModelSpec
+from repro.data.partition import partition_dirichlet, partition_major
+from repro.data.ragged import client_lengths, pad_compatible, pad_stack
+from repro.data.synthetic import make_classification_data
+from repro.nn.modules import tree_flatten_vector
+from repro.nn.vision import get_vision_model
+
+K, N_CLASSES, SHAPE = 4, 10, (14, 14, 1)
+
+
+@pytest.fixture(scope="module")
+def ragged_data():
+    """Dirichlet(0.5)-partitioned synthetic cohort — genuinely ragged."""
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_data(key, 1200, SHAPE, N_CLASSES, sep=2.0)
+    rng = np.random.default_rng(0)
+    idxs = partition_dirichlet(rng, np.asarray(y), K, 0.5)
+    data = [(x[i], y[i]) for i in idxs]
+    sizes = {d[0].shape[0] for d in data}
+    assert len(sizes) > 1, "fixture must be ragged"
+    return data
+
+
+@pytest.fixture(scope="module")
+def mlp_spec():
+    vm = get_vision_model("mlp")
+    return ModelSpec("mlp", lambda k: vm.init(k, SHAPE, N_CLASSES), vm.apply)
+
+
+def _flat(engine, state, role):
+    if isinstance(state, list):
+        return np.stack([np.asarray(tree_flatten_vector(s[role]["params"]))
+                         for s in state])
+    return np.asarray(jax.vmap(tree_flatten_vector)(state[role]["params"]))
+
+
+# ---------------------------------------------------------------------------
+# padded stacking layer
+
+
+@pytest.mark.fast
+def test_pad_stack_shapes_and_lengths(ragged_data):
+    stacked, n_valid = pad_stack(ragged_data)
+    sizes = [d[0].shape[0] for d in ragged_data]
+    n_max = max(sizes)
+    assert stacked[0].shape == (K, n_max) + SHAPE
+    assert stacked[1].shape == (K, n_max)
+    np.testing.assert_array_equal(np.asarray(n_valid), sizes)
+    np.testing.assert_array_equal(client_lengths(ragged_data), sizes)
+    # real rows survive unchanged; padding rows hold the fill value
+    for k, (x, y) in enumerate(ragged_data):
+        np.testing.assert_array_equal(np.asarray(stacked[0][k, :sizes[k]]),
+                                      np.asarray(x))
+        np.testing.assert_array_equal(
+            np.asarray(stacked[0][k, sizes[k]:]), 0.0)
+
+
+@pytest.mark.fast
+def test_pad_stack_rejects_empty_client():
+    x = jnp.ones((4, 3)), jnp.ones((4,))
+    empty = jnp.ones((0, 3)), jnp.ones((0,))
+    with pytest.raises(ValueError, match="zero examples"):
+        pad_stack([x, empty])
+
+
+@pytest.mark.fast
+def test_pad_compatible_semantics():
+    a = (jnp.ones((10, 3)), jnp.zeros((10,), jnp.int32))
+    b = (jnp.ones((7, 3)), jnp.zeros((7,), jnp.int32))
+    assert pad_compatible([a, b])                     # ragged leading: fine
+    c = (jnp.ones((7, 4)), jnp.zeros((7,), jnp.int32))
+    assert not pad_compatible([a, c])                 # trailing dim differs
+    d = (jnp.ones((7, 3)), jnp.zeros((7,), jnp.float32))
+    assert not pad_compatible([a, d])                 # dtype differs
+    e = {"x": jnp.ones((7, 3))}
+    assert not pad_compatible([a, e])                 # tree structure differs
+    f = (jnp.ones((7, 3)), jnp.zeros((9,), jnp.int32))
+    assert not pad_compatible([a, f])                 # inconsistent client
+    assert not pad_compatible([])
+
+
+@pytest.mark.fast
+def test_masked_sampler_never_draws_padding():
+    """Pad with NaN, sample many batches bounded by n_valid: a single drawn
+    padding row would poison the batch with NaN."""
+    n_valid = 37
+    x = jnp.concatenate([jnp.ones((n_valid, 3)),
+                         jnp.full((63, 3), jnp.nan)])
+    y = jnp.concatenate([jnp.zeros((n_valid,)), jnp.full((63,), jnp.nan)])
+    sample = classifier_sampler(16)
+    for i in range(50):
+        xb, yb = sample((x, y), jax.random.PRNGKey(i),
+                        jnp.asarray(n_valid, jnp.int32))
+        assert np.isfinite(np.asarray(xb)).all()
+        assert np.isfinite(np.asarray(yb)).all()
+
+
+def test_engine_round_never_touches_padding(ragged_data, mlp_spec,
+                                            monkeypatch):
+    """Engine-level proof: force NaN padding inside ``_stack_data`` — one
+    sampled padding row or one unmasked step would make params non-finite."""
+    monkeypatch.setattr(engine_mod, "pad_stack",
+                        lambda data: pad_stack(data, fill=float("nan")))
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=0,
+                        lr=1e-3, dp=DPConfig(enabled=False))
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    eng._data_cache.clear()  # dml_engine is LRU-cached; force a re-stack
+    key = jax.random.PRNGKey(3)
+    state = eng.init_states(key)
+    state, metrics = eng.run_round(state, ragged_data, 0, key)
+    assert np.isfinite(_flat(eng, state, "proxy")).all()
+    assert np.isfinite(_flat(eng, state, "private")).all()
+    for v in metrics.values():
+        assert np.isfinite(v).all()
+    eng._data_cache.clear()  # drop the NaN-padded stack: engine is LRU-shared
+
+
+# ---------------------------------------------------------------------------
+# loop == vmap on a ragged Dirichlet cohort (also the CI ragged smoke)
+
+
+@pytest.mark.fast
+def test_ragged_dirichlet_loop_vmap_equivalence(ragged_data, mlp_spec):
+    """Epoch mode (local_steps=0) makes per-client step counts differ, so
+    this exercises padding, masked sampling AND the per-client step mask;
+    final private+proxy params and metrics must match the loop backend."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=0,
+                        dp=DPConfig(enabled=True))
+    key = jax.random.PRNGKey(0)
+    results = {}
+    for backend in ("loop", "vmap"):
+        eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend=backend)
+        state = eng.init_states(key)
+        for t in range(cfg.rounds):
+            state, metrics = eng.run_round(
+                state, ragged_data, t, jax.random.fold_in(key, 10_000 + t))
+        results[backend] = (_flat(eng, state, "private"),
+                            _flat(eng, state, "proxy"), metrics)
+    np.testing.assert_allclose(results["loop"][0], results["vmap"][0],
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(results["loop"][1], results["vmap"][1],
+                               atol=1e-5, rtol=1e-4)
+    for k in results["loop"][2]:
+        np.testing.assert_allclose(results["loop"][2][k],
+                                   results["vmap"][2][k], atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.fast
+def test_ragged_step_mask_composes_with_active_mask(ragged_data, mlp_spec):
+    """§3.4 dropout on a ragged cohort: the per-step exhaustion mask and
+    the active mask compose — loop and vmap still agree."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=0,
+                        dp=DPConfig(enabled=False))
+    key = jax.random.PRNGKey(1)
+    masks = [np.array([True, False, True, True]),
+             np.array([False, True, True, False])]
+    finals = {}
+    for backend in ("loop", "vmap"):
+        eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend=backend)
+        state = eng.init_states(key)
+        for t, act in enumerate(masks):
+            state, _ = eng.run_round(
+                state, ragged_data, t, jax.random.fold_in(key, 10_000 + t),
+                active=act)
+        finals[backend] = _flat(eng, state, "proxy")
+    np.testing.assert_allclose(finals["loop"], finals["vmap"],
+                               atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# padded-state checkpointing
+
+
+@pytest.mark.fast
+def test_ragged_checkpoint_resume_bit_identity(tmp_path, ragged_data,
+                                               mlp_spec):
+    """Save after round 0 of a ragged vmap run, restore, replay round 1:
+    bit-identical to the uninterrupted trajectory."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=0,
+                        dp=DPConfig(enabled=True))
+    key = jax.random.PRNGKey(0)
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    state = eng.init_states(key)
+    state, _ = eng.run_round(state, ragged_data, 0,
+                             jax.random.fold_in(key, 10_000))
+    path = os.path.join(str(tmp_path), "ragged_snap")
+    eng.save_state(path, state, 0, base_key=key)
+    cont, _ = eng.run_round(state, ragged_data, 1,
+                            jax.random.fold_in(key, 10_001))
+    restored, done = eng.restore_state(path, like=eng.init_states(key),
+                                       base_key=key)
+    assert done == 1
+    resumed, _ = eng.run_round(restored, ragged_data, 1,
+                               jax.random.fold_in(key, 10_001))
+    for a, b in zip(jax.tree_util.tree_leaves(cont),
+                    jax.tree_util.tree_leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# stacked-data LRU
+
+
+@pytest.mark.fast
+def test_stack_cache_keyed_lru_no_thrash(ragged_data, mlp_spec):
+    """Two datasets alternating across rounds (train/finetune interleave)
+    must each be padded+stacked exactly ONCE."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=4, batch_size=50, local_steps=1,
+                        lr=2e-3, dp=DPConfig(enabled=False))
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    eng._data_cache.clear()
+    eng._stack_misses = 0
+    other = [(x[: max(1, x.shape[0] // 2)], y[: max(1, y.shape[0] // 2)])
+             for x, y in ragged_data]
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    for t, data in enumerate([ragged_data, other, ragged_data, other]):
+        state, _ = eng.run_round(state, data, t, jax.random.fold_in(key, t))
+    assert eng._stack_misses == 2, \
+        f"alternating datasets re-stacked: {eng._stack_misses} misses"
+
+
+# ---------------------------------------------------------------------------
+# honest auto selector + end-to-end run_federated
+
+
+@pytest.mark.fast
+def test_auto_keeps_ragged_on_stacked_path(ragged_data):
+    cfg = ProxyFLConfig(n_clients=K)
+    assert _resolve_backend(None, cfg, ragged_data) == "auto"
+    # genuinely incompatible trees (trailing dims differ) still fall back
+    bad = list(ragged_data)
+    x, y = bad[0]
+    bad[0] = (x[:, :7], y)
+    assert _resolve_backend(None, cfg, bad) == "loop"
+    assert _resolve_backend("vmap", cfg, bad) == "vmap"  # explicit wins
+
+
+def test_run_federated_auto_on_ragged_dirichlet(ragged_data, mlp_spec):
+    """The acceptance scenario: a Dirichlet-partitioned size-skewed cohort
+    under backend='auto' runs the vmap path end-to-end (no ValueError) and
+    matches the loop backend's final per-client parameters."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=0,
+                        dp=DPConfig(enabled=False))
+    xt, yt = ragged_data[1]
+    out = {}
+    for backend in ("auto", "loop"):
+        res = run_federated("proxyfl", [mlp_spec] * K, mlp_spec, ragged_data,
+                            (xt, yt), cfg, backend=backend)
+        out[backend] = np.stack([
+            np.asarray(tree_flatten_vector(c.proxy_params))
+            for c in res["clients"]])
+    np.testing.assert_allclose(out["auto"], out["loop"], atol=1e-5, rtol=1e-4)
+
+
+def test_stacked_backend_rejects_unmasked_sampler_on_ragged(ragged_data,
+                                                            mlp_spec):
+    """A 2-arg sampler cannot bound its draw on padded data — the engine
+    must refuse loudly instead of silently training on padding."""
+    from repro.core.engine import FederationEngine
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    base = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+
+    def legacy_sample(data_k, kb):  # no n_valid parameter
+        x, y = data_k
+        idx = jax.random.randint(kb, (cfg.batch_size,), 0, x.shape[0])
+        return (x[idx], y[idx])
+
+    eng = FederationEngine(cfg, n_clients=K, step_fns=base.step_fns[0],
+                           init_fns=base.init_fns[0],
+                           sample_fn=legacy_sample, backend="vmap")
+    state = eng.init_states(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="masked sampler"):
+        eng.run_round(state, ragged_data, 0, jax.random.PRNGKey(1))
+
+
+@pytest.mark.fast
+def test_legacy_three_arg_sampler_not_treated_as_masked(ragged_data,
+                                                        mlp_spec):
+    """A pre-existing sampler whose third parameter is NOT named n_valid
+    (e.g. a temperature knob) must never receive the dataset length."""
+    from repro.core.engine import FederationEngine, _sampler_accepts_n_valid
+    seen = []
+
+    def legacy(data_k, kb, temperature=0.5):
+        seen.append(temperature)
+        x, y = data_k
+        idx = jax.random.randint(kb, (50,), 0, x.shape[0])
+        return (x[idx], y[idx])
+
+    assert not _sampler_accepts_n_valid(legacy)
+    assert _sampler_accepts_n_valid(lambda d, k, n_valid=None: d)
+    assert _sampler_accepts_n_valid(lambda d, k, *, n_valid: d)
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    base = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    eng = FederationEngine(cfg, n_clients=K, step_fns=base.step_fns[0],
+                           init_fns=base.init_fns[0], sample_fn=legacy,
+                           backend="loop")
+    state = eng.init_states(jax.random.PRNGKey(0))
+    eng.run_round(state, ragged_data, 0, jax.random.PRNGKey(1))
+    assert seen and all(t == 0.5 for t in seen)  # default untouched
+
+
+@pytest.mark.fast
+def test_rectangular_tree_with_aux_leaves_still_stacks(mlp_spec):
+    """Identical per-client trees whose leaves have DIFFERENT leading dims
+    (e.g. an auxiliary prior alongside the examples) predate raggedness and
+    must keep working on the stacked path — and because no single "example
+    axis" exists, the engine must NOT guess an n_valid from the first leaf
+    (dict order puts the 10-element prior first): the sampler keeps its
+    own shape-derived bound over all 32 examples."""
+    from repro.core.engine import FederationEngine
+    cfg = ProxyFLConfig(n_clients=2, rounds=1, batch_size=8, local_steps=2,
+                        dp=DPConfig(enabled=False))
+    base = dml_engine((mlp_spec,) * 2, mlp_spec, cfg, backend="vmap")
+    data = [{"xy": (jnp.ones((32,) + SHAPE), jnp.zeros((32,), jnp.int32)),
+             "prior": jnp.full((10,), 0.1)} for _ in range(2)]
+    seen_n_valid = []
+
+    def sample(data_k, kb, n_valid=None):
+        seen_n_valid.append(n_valid)
+        x, y = data_k["xy"]
+        hi = x.shape[0] if n_valid is None else n_valid
+        idx = jax.random.randint(kb, (8,), 0, hi)
+        return (x[idx], y[idx])
+
+    eng = FederationEngine(cfg, n_clients=2, step_fns=base.step_fns[0],
+                           init_fns=base.init_fns[0], sample_fn=sample,
+                           backend="vmap")
+    state = eng.init_states(jax.random.PRNGKey(0))
+    state, metrics = eng.run_round(state, data, 0, jax.random.PRNGKey(1))
+    for v in metrics.values():
+        assert np.isfinite(v).all()
+    assert seen_n_valid and all(nv is None for nv in seen_n_valid), \
+        f"engine guessed n_valid from a non-example leaf: {seen_n_valid}"
+
+
+@pytest.mark.fast
+def test_required_n_valid_sampler_works_on_loop_backend(ragged_data,
+                                                        mlp_spec):
+    """A sampler whose ``n_valid`` parameter has NO default must run on
+    the loop backend too (auto can silently fall back to it)."""
+    from repro.core.engine import FederationEngine
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    base = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+
+    def strict_sample(data_k, kb, n_valid):  # required third argument
+        x, y = data_k
+        idx = jax.random.randint(kb, (cfg.batch_size,), 0, n_valid)
+        return (x[idx], y[idx])
+
+    eng = FederationEngine(cfg, n_clients=K, step_fns=base.step_fns[0],
+                           init_fns=base.init_fns[0],
+                           sample_fn=strict_sample, backend="loop")
+    state = eng.init_states(jax.random.PRNGKey(0))
+    state, metrics = eng.run_round(state, ragged_data, 0,
+                                   jax.random.PRNGKey(1))
+    assert np.isfinite(_flat(eng, state, "proxy")).all()
+    for v in metrics.values():
+        assert np.isfinite(v).all()
+
+
+# ---------------------------------------------------------------------------
+# partition property tests (hypothesis; skip cleanly when absent)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8),
+       st.floats(0.1, 10.0), st.integers(40, 300))
+def test_partition_dirichlet_disjoint_in_bounds(seed, n_clients, alpha, n):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 5, size=n)
+    idxs = partition_dirichlet(np.random.default_rng(seed + 1), y,
+                               n_clients, alpha)
+    allv = np.concatenate(idxs) if idxs else np.array([], np.int64)
+    assert len(allv) == len(set(allv.tolist())), "client index sets overlap"
+    assert len(allv) == n, "every sample assigned exactly once"
+    if len(allv):
+        assert allv.min() >= 0 and allv.max() < n
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6),
+       st.floats(0.2, 0.9), st.integers(10, 60))
+def test_partition_major_disjoint_in_bounds(seed, n_clients, p_major,
+                                            per_client):
+    n_classes = 5
+    rng = np.random.default_rng(seed)
+    n = per_client * n_clients * 2
+    y = rng.integers(0, n_classes, size=n)
+    idxs = partition_major(np.random.default_rng(seed + 1), y, n_clients,
+                           per_client, p_major, n_classes)
+    allv = np.concatenate(idxs)
+    assert len(allv) == len(set(allv.tolist())), "client index sets overlap"
+    assert allv.min() >= 0 and allv.max() < n
+    for i in idxs:
+        assert len(i) <= per_client
