@@ -125,13 +125,17 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   sigma: float = 1.0, clip: float = 1.0,
                   n_train_factor: float = 1.0,
                   backend: str = None, dropout_rate: float = 0.0,
+                  rounds_per_block: int = 0,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
                   resume: bool = None
                   ) -> List[Dict]:
     """``backend`` selects the FederationEngine execution path for every
     figure run ("auto" -> one compiled vmap round program on these
     homogeneous cohorts; override via REPRO_BENCH_BACKEND). ``dropout_rate``
-    turns on the §3.4 per-round dropout/join scenario.
+    turns on the §3.4 per-round dropout/join scenario. ``rounds_per_block``
+    (env ``REPRO_BENCH_BLOCK``) fuses that many rounds into one compiled
+    engine round-block — bit-identical results, fewer host round-trips; 0/1
+    keep the historical per-round execution.
 
     ``checkpoint_dir`` makes every (method, seed) run snapshot its complete
     federation state every ``checkpoint_every`` rounds under
@@ -141,6 +145,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     ``REPRO_BENCH_CKPT_DIR``, ``REPRO_BENCH_CKPT_EVERY``,
     ``REPRO_BENCH_RESUME``."""
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
+    rounds_per_block = rounds_per_block or _env_int("REPRO_BENCH_BLOCK") or 1
     checkpoint_dir = checkpoint_dir or os.environ.get("REPRO_BENCH_CKPT_DIR")
     checkpoint_every = checkpoint_every or _env_int("REPRO_BENCH_CKPT_EVERY")
     if resume is None:
@@ -170,6 +175,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
             res = run_federated(
                 method, [priv] * n_clients, prox, client_data, test, cfg,
                 seed=seed, eval_every=rounds, backend=backend,
+                rounds_per_block=rounds_per_block,
                 checkpoint_dir=(os.path.join(checkpoint_dir, dataset)
                                 if checkpoint_dir else None),
                 checkpoint_every=checkpoint_every, resume=resume)

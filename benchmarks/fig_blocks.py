@@ -1,0 +1,94 @@
+"""Fused round-blocks: rounds/sec vs block size per backend (beyond-paper).
+
+The paper's O(1)-communication claim (Fig. 4) is about gossip VOLUME; on a
+simulator the wall-clock is instead dominated by per-round host
+synchronization — rebuilding P^(t) in numpy, folding the round key,
+re-dispatching the compiled round program and pulling metrics, every
+round. ``FederationEngine.run_rounds`` fuses B consecutive rounds into one
+compiled program (outer ``lax.scan`` over rounds, ``mix_schedule``
+precomputing the stacked [B, K, K] exchange matrices), so the host is
+re-entered once per block. This figure quantifies how much of the round
+time that overhead was: rounds/sec vs B per backend at K ∈ {4, 8, 16}, in
+the gossip-bound regime (``local_steps=1`` — one local step, one exchange;
+the regime the paper's communication claim lives in). The loop backend has
+per-round semantics by definition and appears as the B=1 baseline only.
+
+Results are also written as JSON (``REPRO_BENCH_BLOCKS_JSON``, default
+``fig_blocks.json`` in the CWD) including ``speedup_vs_b1`` — the measured
+rounds/sec speedup of each B>1 vmap configuration over B=1 on the same
+cohort (the acceptance metric: host overhead recovered by fusing the round
+boundary).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.engine import dml_engine
+
+from .common import FULL, federation_data, spec_of
+
+
+def _time_blocks(engine, data, key, rounds: int, block: int,
+                 trials: int = 3) -> float:
+    """Steady-state seconds per ROUND when driving ``rounds`` rounds in
+    blocks of ``block`` (compile excluded: one warm-up block; BEST of
+    ``trials`` — the standard throughput measure, robust to CPU
+    contention, which medians are not on shared small machines)."""
+    state = engine.init_states(key)
+    state, _ = engine.run_rounds(state, data, 0, min(block, rounds), key)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    ts = []
+    for _ in range(trials):
+        t0 = time.time()
+        t = 0
+        while t < rounds:
+            n = min(block, rounds - t)
+            state, _ = engine.run_rounds(state, data, t, n, key)
+            t += n
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        ts.append((time.time() - t0) / rounds)
+    return float(np.min(ts))
+
+
+def run(full: bool = FULL):
+    cohorts = (4, 8, 16) if full else (4, 8)
+    rounds = 16 if full else 8
+    blocks = (1, 2, 4, 8)
+    dataset = "mnist"
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    for n_clients in cohorts:
+        client_data, _, d = federation_data(
+            dataset, n_clients, seed=0, n_train_factor=1.0 if full else 0.2)
+        spec = spec_of("mlp", d["shape"], d["n_classes"])
+        # gossip-bound regime: one local step then one exchange — the end
+        # of Algorithm 1 where per-round host overhead dominates
+        cfg = ProxyFLConfig(n_clients=n_clients, rounds=rounds, local_steps=1,
+                            batch_size=16, seed=0, dp=DPConfig(enabled=False))
+        base = {}
+        for backend in ("loop", "vmap"):
+            engine = dml_engine((spec,) * n_clients, spec, cfg,
+                                backend=backend)
+            for block in blocks if backend == "vmap" else (1,):
+                sec = _time_blocks(engine, client_data, key, rounds, block)
+                if block == 1:  # B=1 is each backend's own baseline
+                    base[backend] = sec
+                rows.append({
+                    "dataset": dataset, "clients": n_clients,
+                    "backend": backend, "rounds_per_block": block,
+                    "local_steps": 1,
+                    "sec_per_round": round(sec, 5),
+                    "rounds_per_sec": round(1.0 / sec, 2),
+                    "speedup_vs_b1": round(base[backend] / sec, 2),
+                })
+    path = os.environ.get("REPRO_BENCH_BLOCKS_JSON", "fig_blocks.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

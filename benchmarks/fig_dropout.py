@@ -1,0 +1,38 @@
+"""Dropout/join scenario sweep: final accuracy vs dropout rate (§3.4).
+
+The paper claims the time-varying PushSum graph "can adapt to clients
+joining or dropping out" — the exchange re-knits over the active subset
+each round, mass conservation holds, and learning should degrade
+gracefully (not collapse) as the per-round dropout probability grows.
+This sweep runs ProxyFL through ``bench_methods(dropout_rate=...)`` over a
+grid of rates and reports the final private AND proxy accuracy per rate;
+rate 0.0 is the everyone-participates reference the other rows are read
+against. The §3.4 schedule is deterministic per (seed, round), so rows are
+reproducible, and every backend replays the identical membership
+trajectory.
+"""
+from __future__ import annotations
+
+from .common import FULL, bench_methods
+
+
+def run(full: bool = FULL):
+    n_clients = 8 if full else 4
+    rounds = 30 if full else 6
+    seeds = (0, 1, 2) if full else (0,)
+    rates = (0.0, 0.2, 0.4, 0.6) if full else (0.0, 0.3, 0.6)
+
+    rows = []
+    for rate in rates:
+        for r in bench_methods("mnist", ("proxyfl",), n_clients=n_clients,
+                               rounds=rounds, seeds=seeds, dp=False,
+                               n_train_factor=1.0 if full else 0.25,
+                               dropout_rate=rate):
+            rows.append({
+                "dropout_rate": rate,
+                "which": ("proxy" if r["method"].endswith("-proxy")
+                          else "private"),
+                **{k: r[k] for k in ("dataset", "method", "acc_mean",
+                                     "acc_std", "rounds", "clients")},
+            })
+    return rows

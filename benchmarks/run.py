@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run            # CPU-budget settings
     REPRO_BENCH_FULL=1 python -m benchmarks.run        # paper-scale settings
     PYTHONPATH=src python -m benchmarks.run --only fig4_comm,fig11_batchsize
+    PYTHONPATH=src python -m benchmarks.run --list     # registry + one-liners
 """
 from __future__ import annotations
 
@@ -13,33 +14,56 @@ import sys
 import time
 
 from . import (fig3_accuracy, fig4_comm, fig5_ablations, fig6_kvasir,
-               fig11_batchsize, fig_ragged, mia_privacy, roofline,
-               table2_histo)
+               fig11_batchsize, fig_blocks, fig_dropout, fig_ragged,
+               mia_privacy, roofline, table2_histo)
 
+# name -> (module, paper anchor). The one-line description shown by
+# ``--list`` is each module's own docstring first line, so registry and
+# docs cannot drift apart; tests assert every fig_* file on disk is here.
 MODULES = {
-    "fig3_accuracy": fig3_accuracy,    # Fig. 3 / Fig. 9
-    "fig4_comm": fig4_comm,            # Fig. 4 / Fig. 13
-    "fig5_ablations": fig5_ablations,  # Fig. 5 a-c / Fig. 12
-    "fig6_kvasir": fig6_kvasir,        # Fig. 6
-    "table2_histo": table2_histo,      # Fig. 8 / Table 2
-    "fig11_batchsize": fig11_batchsize,  # Fig. 11
-    "fig_ragged": fig_ragged,          # beyond-paper: ragged vmap vs loop
-    "mia_privacy": mia_privacy,        # beyond-paper: empirical DP check
-    "roofline": roofline,              # §Roofline (reads dry-run artifacts)
+    "fig3_accuracy": (fig3_accuracy, "Fig. 3 / Fig. 9"),
+    "fig4_comm": (fig4_comm, "Fig. 4 / Fig. 13"),
+    "fig5_ablations": (fig5_ablations, "Fig. 5 a-c / Fig. 12"),
+    "fig6_kvasir": (fig6_kvasir, "Fig. 6"),
+    "table2_histo": (table2_histo, "Fig. 8 / Table 2"),
+    "fig11_batchsize": (fig11_batchsize, "Fig. 11"),
+    "fig_ragged": (fig_ragged, "beyond-paper"),
+    "fig_blocks": (fig_blocks, "beyond-paper"),
+    "fig_dropout": (fig_dropout, "paper §3.4"),
+    "mia_privacy": (mia_privacy, "beyond-paper"),
+    "roofline": (roofline, "§Roofline"),
 }
+
+
+def _describe(name: str) -> str:
+    mod, anchor = MODULES[name]
+    first = (mod.__doc__ or "").strip().splitlines()
+    return f"{name}: [{anchor}] {first[0] if first else '(no docstring)'}"
+
+
+def list_benchmarks() -> list:
+    """Registry listing, one line per benchmark (also the --list output)."""
+    return [_describe(name) for name in MODULES]
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="",
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="print every registered benchmark with its "
+                         "one-line description and exit")
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     args = ap.parse_args(argv)
+    if args.list:
+        for line in list_benchmarks():
+            print(line)
+        return 0
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(MODULES)
 
     failures = 0
     for name in names:
-        mod = MODULES[name]
+        mod = MODULES[name][0]
         t0 = time.time()
         print(f"\n===== {name} =====", flush=True)
         try:

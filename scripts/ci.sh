@@ -1,18 +1,25 @@
 #!/usr/bin/env bash
 # Single CI entry point: tier-1 test suite + headless quickstart example.
 #
-#   scripts/ci.sh           # full tier-1 run (ROADMAP verify command)
-#   scripts/ci.sh --fast    # only tests marked @pytest.mark.fast; includes
-#                           # the ragged-cohort smoke (tests/test_ragged.py:
-#                           # Dirichlet size-skewed clients on the vmap
-#                           # backend — padded stacking, masked sampling,
-#                           # loop==vmap equivalence) so every PR exercises
-#                           # the compiled ragged path
-#   scripts/ci.sh --smoke   # resume-correctness smoke: 4-client federation,
-#                           # 3 rounds with --checkpoint-every 1, killed
-#                           # after round 2 and resumed; fails unless the
-#                           # final proxy params are bit-identical to an
-#                           # uninterrupted run (loop AND vmap backends)
+#   scripts/ci.sh             # full tier-1 run (ROADMAP verify command)
+#   scripts/ci.sh --fast      # only tests marked @pytest.mark.fast; includes
+#                             # the ragged-cohort smoke (tests/test_ragged.py)
+#                             # and the round-block bit-identity smoke
+#                             # (tests/test_blocks.py: blocked == per-round,
+#                             # params and epsilon, loop AND vmap) so every
+#                             # PR exercises both compiled paths
+#   scripts/ci.sh --smoke     # resume-correctness smoke: 4-client federation
+#                             # killed after round 2 of 3 and resumed (per-
+#                             # round AND rounds_per_block=2 kill-after-block)
+#                             # must be bit-identical to uninterrupted runs
+#   scripts/ci.sh --shard I/N # deterministic 1-based slice of the test FILES
+#                             # (sorted, round-robin) — the GitHub workflow
+#                             # matrixes the full suite across shards; the
+#                             # quickstart example runs on shard 1 only
+#
+# The full suite exceeds 10 minutes serial, so pytest runs with `-n auto`
+# whenever pytest-xdist is importable and falls back to serial when it is
+# not (minimal containers stay supported).
 #
 # Extra arguments after the mode flag are forwarded to pytest.
 set -euo pipefail
@@ -20,22 +27,57 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-# plain string (not an array): empty arrays break under `set -u` on bash < 4.4
+# plain strings (not arrays): empty arrays break under `set -u` on bash < 4.4
 MARK=""
+SHARD=""
 if [[ "${1:-}" == "--fast" ]]; then
   MARK="-m fast"
   shift
 elif [[ "${1:-}" == "--smoke" ]]; then
   shift
-  echo "== smoke: checkpoint/resume bit-identity =="
+  echo "== smoke: checkpoint/resume bit-identity (incl. round-blocks) =="
   python scripts/resume_smoke.py
+  echo "CI OK"
+  exit 0
+elif [[ "${1:-}" == "--shard" ]]; then
+  SHARD="${2:?--shard needs I/N (e.g. 1/2)}"
+  shift 2
+fi
+
+XDIST=""
+if python -c "import xdist" >/dev/null 2>&1; then
+  XDIST="-n auto"
+fi
+
+if [[ -n "$SHARD" ]]; then
+  I="${SHARD%%/*}"
+  N="${SHARD##*/}"
+  FILES=""
+  i=0
+  for f in tests/test_*.py; do  # glob order is sorted and stable
+    if (( i % N == I - 1 )); then FILES="$FILES $f"; fi
+    i=$((i + 1))
+  done
+  if [[ -z "$FILES" ]]; then
+    # an empty slice (I > N or I > file count) must fail loudly — bare
+    # pytest would silently collect the WHOLE tree instead
+    echo "error: shard $SHARD selects no test files" >&2
+    exit 1
+  fi
+  echo "== tier-1 shard $SHARD: pytest$FILES =="
+  # shellcheck disable=SC2086  # FILES/XDIST intentionally word-split
+  python -m pytest -x -q $XDIST $FILES "$@"
+  if [[ "$I" == "1" ]]; then
+    echo "== example: quickstart (headless) =="
+    python examples/quickstart.py
+  fi
   echo "CI OK"
   exit 0
 fi
 
 echo "== tier-1: pytest =="
-# shellcheck disable=SC2086  # MARK intentionally word-splits into -m fast
-python -m pytest -x -q $MARK "$@"
+# shellcheck disable=SC2086  # MARK/XDIST intentionally word-split
+python -m pytest -x -q $MARK $XDIST "$@"
 
 echo "== example: quickstart (headless) =="
 python examples/quickstart.py

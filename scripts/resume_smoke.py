@@ -15,6 +15,12 @@ Fails unless resumed == reference exactly (np.array_equal on every proxy
 AND private leaf, exact epsilon match), and unless the loop- and
 vmap-backend resumed runs agree within numerical tolerance.
 
+The same contract is then enforced for FUSED round-blocks (vmap): the
+federation runs with ``rounds_per_block=2`` and ``checkpoint_every=2`` —
+whole blocks compiled as one XLA program, snapshots on block edges — is
+killed after the first block, resumed, and must still land bit-identically
+on the per-round reference trajectory.
+
     PYTHONPATH=src python scripts/resume_smoke.py
 """
 import dataclasses
@@ -82,12 +88,42 @@ def run_backend(backend: str) -> np.ndarray:
     return flat(resumed, "proxy_params")
 
 
+def run_blocked() -> None:
+    """Kill-after-BLOCK/resume: rounds_per_block=2 fuses rounds {0,1} into
+    one compiled block (checkpoint_every=2 puts the snapshot on the block
+    edge); the run is killed there, resumed for the final round, and must
+    reproduce the plain per-round reference bit-for-bit."""
+    spec, data, test, cfg = build_federation()
+    run = lambda c, **kw: run_federated("proxyfl", [spec] * K, spec, data,
+                                        test, c, seed=0, eval_every=ROUNDS,
+                                        backend="vmap", **kw)
+    reference = run(cfg)  # per-round (rounds_per_block defaults to 1)
+    with tempfile.TemporaryDirectory() as d:
+        blk = dict(checkpoint_dir=d, checkpoint_every=KILL_AFTER,
+                   rounds_per_block=KILL_AFTER)
+        run(dataclasses.replace(cfg, rounds=KILL_AFTER), **blk)  # "killed"
+        resumed = run(cfg, resume=True, **blk)
+
+    failures = []
+    for role in ("proxy_params", "private_params"):
+        if not np.array_equal(flat(reference, role), flat(resumed, role)):
+            failures.append(f"{role} differ after blocked resume")
+    if reference["epsilon"] != resumed["epsilon"]:
+        failures.append(f"epsilon differs: {reference['epsilon']} != "
+                        f"{resumed['epsilon']}")
+    if failures:
+        raise SystemExit("[resume-smoke:blocked] FAIL: " + "; ".join(failures))
+    print(f"[resume-smoke:blocked] OK — rounds_per_block={KILL_AFTER} "
+          f"kill-after-block resume is bit-identical to the per-round run")
+
+
 def main() -> int:
     finals = {b: run_backend(b) for b in ("vmap", "loop")}
     np.testing.assert_allclose(finals["vmap"], finals["loop"],
                                atol=1e-5, rtol=1e-4,
                                err_msg="loop/vmap resumed runs diverged")
     print("[resume-smoke] OK — loop and vmap resumed trajectories agree")
+    run_blocked()
     return 0
 
 

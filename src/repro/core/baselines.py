@@ -18,7 +18,11 @@ models with DP-SGD; ProxyFL and FML apply DP-SGD to proxies only, which is
 why their private models retain much higher utility.
 
 ``run_federated`` is the single driver used by every per-figure benchmark;
-it returns a per-round history of each client's test accuracy. The engine
+it returns a per-round history of each client's test accuracy. Rounds are
+executed in engine-owned ROUND-BLOCKS (``_drive_blocks``: up to
+``rounds_per_block`` rounds fused into one compiled program, host re-
+entered only at block edges, eval/checkpoint cadences cut to block edges
+— bit-identical to per-round execution at any block size). The engine
 ``backend`` ("loop" | "vmap" | "shard_map") is selectable per call or via
 ``ProxyFLConfig.backend``; "auto" compiles the whole round into one XLA
 program (vmap) whenever the cohort is homogeneous — ragged (size-skewed,
@@ -43,8 +47,8 @@ from ..checkpoint.federation import FederationCheckpointer, config_fingerprint
 from ..configs.base import ProxyFLConfig
 from ..data.ragged import pad_compatible
 from .accountant import PrivacyAccountant
-from .engine import dml_engine, single_model_engine
-from .protocol import ClientState, ModelSpec, evaluate
+from .engine import block_spans, dml_engine, single_model_engine
+from .protocol import (ClientState, ModelSpec, evaluate, evaluate_batched)
 
 METHODS = ("proxyfl", "fml", "fedavg", "avgpush", "cwt", "regular", "joint")
 
@@ -98,6 +102,55 @@ def _checkpointer(checkpoint_dir, checkpoint_every, method: str,
         every=checkpoint_every or 1, fingerprint=fp)
 
 
+def _eval_clients(engine, state, specs, role: str, xt, yt) -> List[float]:
+    """Test accuracy of every client's ``role`` model. Homogeneous cohorts
+    evaluate BATCHED — stacked params, one jitted vmapped apply, a single
+    [K] device->host pull — instead of K sequential per-client loops;
+    heterogeneous architectures fall back per client."""
+    specs = (list(specs) if isinstance(specs, (list, tuple))
+             else [specs] * engine.K)
+    if all(s == specs[0] for s in specs):
+        stacked = engine.stacked_params(state, role)
+        if stacked is not None:
+            return evaluate_batched(specs[0], stacked, xt, yt)
+    return [evaluate(specs[k], engine.client_params(state, k, role), xt, yt)
+            for k in range(engine.K)]
+
+
+def _eval_row(engine, state, round_no: int, roles, xt, yt) -> Dict:
+    """One history row: ``roles`` is a list of (history key, spec(s),
+    engine role) triples — the single shape behind the previous four
+    copy-pasted eval/history blocks."""
+    row: Dict = {"round": round_no}
+    for hist_key, specs, role in roles:
+        row[hist_key] = _eval_clients(engine, state, specs, role, xt, yt)
+    return row
+
+
+def _drive_blocks(engine, state, data, start: int, rounds: int, base_key,
+                  ckpt, eval_every: int, rounds_per_block: int, eval_cb):
+    """ONE driver loop for every method: execute ``rounds - start`` rounds
+    in engine-owned round-blocks of (at most) ``rounds_per_block`` rounds,
+    re-entering the host only at block edges.
+
+    Blocks are cut (``engine.block_spans``) so that every checkpoint-
+    cadence round and every eval-cadence round lands ON a block edge — the
+    snapshot set and the history rows are exactly those of the historical
+    per-round loop, and a killed run resumes from a block edge
+    bit-identically. ``rounds_per_block=1`` IS the per-round loop
+    (run_rounds degenerates to run_round per round)."""
+    for t, n in block_spans(start, rounds, rounds_per_block,
+                            ckpt.every if ckpt is not None else 0,
+                            eval_every):
+        state, _ = engine.run_rounds(state, data, t, n, base_key)
+        done = t + n
+        if ckpt is not None:
+            ckpt.maybe_save(engine, state, done - 1, base_key=base_key)
+        if (eval_every > 0 and done % eval_every == 0) or done == rounds:
+            eval_cb(state, done)
+    return state
+
+
 def run_federated(
     method: str,
     private_specs: Sequence[ModelSpec],
@@ -111,6 +164,7 @@ def run_federated(
     n_classes: Optional[int] = None,
     eval_proxy: bool = False,
     backend: Optional[str] = None,
+    rounds_per_block: int = 1,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 0,
     resume: bool = False,
@@ -120,6 +174,13 @@ def run_federated(
     For FedAvg/AvgPush/CWT/Regular the client model is ``proxy_spec`` (all
     must share one architecture — the constraint ProxyFL removes). Joint
     pools all client data into one model.
+
+    ``rounds_per_block`` fuses that many consecutive rounds into one
+    compiled engine round-block (vmap/shard_map backends; the loop backend
+    keeps per-round execution). Any value replays the identical trajectory
+    bit-for-bit — blocks only remove per-round host synchronization —
+    and eval/checkpoint cadences still land on block edges; ``1`` (the
+    default) is exactly the historical per-round loop.
 
     ``checkpoint_dir`` snapshots complete federation state (client states,
     de-bias weights, round counter, accountant steps) every
@@ -149,89 +210,56 @@ def run_federated(
             restored = ckpt.restore_latest(engine, like=state, base_key=key)
             if restored is not None:
                 state, start = restored
-        data = list(client_data)
-        for t in range(start, cfg.rounds):
-            rk = jax.random.fold_in(key, 10_000 + t)
-            state, _ = engine.run_round(state, data, t, rk)
-            if ckpt is not None:
-                ckpt.maybe_save(engine, state, t, base_key=key)
-            if (t + 1) % eval_every == 0 or t == cfg.rounds - 1:
-                history.append({
-                    "round": t + 1,
-                    "private_acc": [
-                        evaluate(private_specs[k],
-                                 engine.client_params(state, k, "private"),
-                                 xt, yt) for k in range(K)],
-                    "proxy_acc": [
-                        evaluate(proxy_spec,
-                                 engine.client_params(state, k, "proxy"),
-                                 xt, yt) for k in range(K)]})
-        if not history:
-            # resume landed at (or past) the configured horizon: no rounds
-            # ran, but callers still expect a final evaluation row
-            history.append({
-                "round": start,
-                "private_acc": [
-                    evaluate(private_specs[k],
-                             engine.client_params(state, k, "private"),
-                             xt, yt) for k in range(K)],
-                "proxy_acc": [
-                    evaluate(proxy_spec,
-                             engine.client_params(state, k, "proxy"),
-                             xt, yt) for k in range(K)]})
-        clients = [
+        roles = [("private_acc", list(private_specs[:K]), "private"),
+                 ("proxy_acc", proxy_spec, "proxy")]
+        rounds_done = cfg.rounds
+    else:
+        # ----- single-model methods -----
+        dp = cfg.dp.enabled
+        if method == "joint":
+            x = jnp.concatenate([d[0] for d in client_data])
+            y = jnp.concatenate([d[1] for d in client_data])
+            jcfg = (dataclasses.replace(cfg, local_steps=cfg.local_steps * K)
+                    if cfg.local_steps else cfg)
+            client_data = [(x, y)]
+            engine_cfg = jcfg
+        else:
+            engine_cfg = cfg
+        engine = single_model_engine(proxy_spec, engine_cfg, dp,
+                                     mix=_SINGLE_MIX[method], backend=backend,
+                                     n_clients=len(client_data))
+        accs = _accountants(engine_cfg, [d[0].shape[0] for d in client_data])
+        engine.attach_accountants(accs)
+        state = engine.init_states(key)
+        start = 0
+        if ckpt is not None and resume:
+            restored = ckpt.restore_latest(engine, like=state, base_key=key)
+            if restored is not None:
+                state, start = restored
+        roles = [("acc", proxy_spec, "proxy")]
+        rounds_done = engine_cfg.rounds
+
+    state = _drive_blocks(
+        engine, state, list(client_data), start, rounds_done, key, ckpt,
+        eval_every, rounds_per_block,
+        lambda st, t_done: history.append(
+            _eval_row(engine, st, t_done, roles, xt, yt)))
+    if not history:
+        # resume landed at (or past) the configured horizon: no rounds
+        # ran, but callers still expect a final evaluation row
+        history.append(_eval_row(engine, state, start, roles, xt, yt))
+
+    eps = [a.epsilon() if a else None for a in accs]
+    if method in ("proxyfl", "fml"):
+        clients: List = [
             ClientState(s["private"]["params"], s["private"]["opt"],
                         s["proxy"]["params"], s["proxy"]["opt"],
                         float(s["w"]), accs[k])
             for k, s in enumerate(engine.export_states(state))]
-        eps = [a.epsilon() if a else None for a in accs]
-        return {"history": history, "epsilon": eps, "clients": clients}
-
-    # ----- single-model methods -----
-    dp = cfg.dp.enabled
-    if method == "joint":
-        x = jnp.concatenate([d[0] for d in client_data])
-        y = jnp.concatenate([d[1] for d in client_data])
-        jcfg = (dataclasses.replace(cfg, local_steps=cfg.local_steps * K)
-                if cfg.local_steps else cfg)
-        data = [(x, y)]
-        n_eff, engine_cfg = 1, jcfg
     else:
-        data = list(client_data)
-        n_eff, engine_cfg = K, cfg
-
-    engine = single_model_engine(proxy_spec, engine_cfg, dp,
-                                 mix=_SINGLE_MIX[method], backend=backend,
-                                 n_clients=n_eff)
-    accs = _accountants(engine_cfg, [d[0].shape[0] for d in data])
-    engine.attach_accountants(accs)
-    state = engine.init_states(key)
-    start = 0
-    if ckpt is not None and resume:
-        restored = ckpt.restore_latest(engine, like=state, base_key=key)
-        if restored is not None:
-            state, start = restored
-    for t in range(start, engine_cfg.rounds):
-        rk = jax.random.fold_in(key, 10_000 + t)
-        state, _ = engine.run_round(state, data, t, rk)
-        if ckpt is not None:
-            ckpt.maybe_save(engine, state, t, base_key=key)
-        if (t + 1) % eval_every == 0 or t == engine_cfg.rounds - 1:
-            history.append({
-                "round": t + 1,
-                "acc": [evaluate(proxy_spec,
-                                 engine.client_params(state, k, "proxy"),
-                                 xt, yt) for k in range(n_eff)]})
-    if not history:
-        history.append({
-            "round": start,
-            "acc": [evaluate(proxy_spec,
-                             engine.client_params(state, k, "proxy"),
-                             xt, yt) for k in range(n_eff)]})
-    clients = [SingleModelClient(s["proxy"]["params"], s["proxy"]["opt"],
-                                 accs[k])
-               for k, s in enumerate(engine.export_states(state))]
-    eps = [a.epsilon() if a else None for a in accs]
+        clients = [SingleModelClient(s["proxy"]["params"], s["proxy"]["opt"],
+                                     accs[k])
+                   for k, s in enumerate(engine.export_states(state))]
     return {"history": history, "epsilon": eps, "clients": clients}
 
 

@@ -64,6 +64,33 @@ Exchange rules (``mix``) are column-stochastic matrices built by
 :func:`repro.core.gossip.mix_matrix`: ``"pushsum"`` (ProxyFL/AvgPush),
 ``"mean"`` (FedAvg/FML), ``"ring"`` (CWT), ``"none"`` (Regular/Joint).
 
+Round-blocks (fused multi-round execution)
+------------------------------------------
+The ENGINE owns the round boundary, not the caller. ``run_round`` executes
+one round; :meth:`FederationEngine.run_rounds` executes a whole block of
+``n_rounds`` with the host re-entered only at the block edge. On the vmap
+backend the block is ONE compiled XLA program — an outer ``lax.scan`` over
+rounds wrapped around the per-round scan/vmap body, consuming the block's
+exchange matrices as a single stacked ``[T, K, K]`` runtime argument
+(:func:`repro.core.gossip.mix_schedule`) and folding each round's RNG key
+in-scan (``round_key``; the per-round schedule is replayed bit-exactly, so
+ANY block size produces bit-identical parameters and epsilon). shard_map
+blocks unroll the per-round collective schedules inside one jit; the loop
+backend keeps genuine per-round semantics as the bit-identity reference.
+
+Block EDGES are the protocol's host-visible boundary: checkpoints are
+written there (a kill/resume lands on an edge and replays bit-identically
+— drivers cut blocks so every checkpoint/eval cadence round IS an edge),
+evaluation and history rows read there, DP accountants bulk-step there
+(``PrivacyAccountant.step(n)``), and §3.4 join/leave membership is
+resolved there for the whole block (``active_schedule``). This is the
+prerequisite for the planned ASYNC fourth backend: overlap-friendly
+variants (clients gossiping stale proxies while the next local scan runs,
+Assran et al.) need the engine — not the caller — to own a multi-round
+horizon inside which rounds may interleave, while the block edge stays
+the only point where external observers (checkpointer, evaluator,
+membership changes) interact with the federation.
+
 Dropout/join (paper §3.4): every backend threads an ``active`` bool mask
 through the round — inactive clients run no local steps, keep their state,
 and the time-varying graph re-knits itself over the active subset (mass
@@ -75,9 +102,11 @@ Typical usage::
 
     engine = dml_engine((spec,) * K, proxy_spec, cfg)   # backend="auto"
     state = engine.init_states(jax.random.PRNGKey(0))
-    for t in range(cfg.rounds):
+    for t in range(cfg.rounds):                         # per-round driving
         state, metrics = engine.run_round(
-            state, client_data, t, jax.random.fold_in(key, 10_000 + t))
+            state, client_data, t, round_key(key, t))
+    # ... or hand the engine a whole fused horizon (same bits, one program):
+    state, metrics = engine.run_rounds(state, client_data, 0, cfg.rounds, key)
     params_k = engine.client_params(state, k, role="private")
 
 The per-client state is a pytree dict with (at least) ``{"proxy":
@@ -102,10 +131,16 @@ from ..configs.base import ProxyFLConfig
 from ..data.ragged import pad_compatible, pad_stack
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
-from .gossip import gossip_shift, mix_matrix, pushsum_gossip_shard, shard_map_fn
+from .gossip import (gossip_shift, mix_matrix, mix_schedule,
+                     pushsum_gossip_shard, shard_map_fn, shift_schedule)
 
 BACKENDS = ("loop", "vmap", "shard_map")
 MIXES = ("pushsum", "mean", "ring", "none")
+
+# round t's RNG key is fold_in(base_key, ROUND_KEY_OFFSET + t) — the
+# historical schedule every driver used; round-blocks fold it IN-SCAN so a
+# blocked run replays the identical per-round keys bit-exactly.
+ROUND_KEY_OFFSET = 10_000
 
 StepFn = Callable[[Dict, Any, jnp.ndarray], Tuple[Dict, Dict]]
 InitFn = Callable[[jnp.ndarray], Dict]
@@ -129,6 +164,11 @@ def _sampler_accepts_n_valid(fn) -> bool:
                                         p.KEYWORD_ONLY)
 
 
+def round_key(base_key, t):
+    """Round t's RNG key under the engine's canonical schedule."""
+    return jax.random.fold_in(base_key, ROUND_KEY_OFFSET + t)
+
+
 def active_mask(t: int, n_clients: int, cfg: ProxyFLConfig
                 ) -> Optional[np.ndarray]:
     """Deterministic per-round §3.4 dropout schedule from the config.
@@ -146,6 +186,41 @@ def active_mask(t: int, n_clients: int, cfg: ProxyFLConfig
     return act
 
 
+def block_spans(start: int, rounds: int, rounds_per_block: int, *cadences):
+    """Yield ``(t0, n)`` round-block spans covering ``[start, rounds)``.
+
+    Blocks are at most ``rounds_per_block`` long and are CUT so that every
+    multiple of each nonzero cadence (checkpoint_every, eval_every, ...)
+    lands exactly on a block edge — the one place drivers may observe the
+    federation. This is the single definition of the block-cutting rule;
+    both ``baselines._drive_blocks`` and ``launch/train.py`` iterate it,
+    so the "cadence rounds are block edges" invariant cannot drift."""
+    B = max(1, int(rounds_per_block or 1))
+    t = start
+    while t < rounds:
+        n = min(B, rounds - t)
+        for c in cadences:
+            if c and c > 0:
+                n = min(n, c - t % c)
+        yield t, n
+        t += n
+
+
+def active_schedule(t0: int, n_rounds: int, n_clients: int,
+                    cfg: ProxyFLConfig) -> Optional[np.ndarray]:
+    """Block-level §3.4 membership: ``active_mask`` for each round of a
+    block, stacked to bool[T, K]. None when no dropout is configured (the
+    per-t masks are all None). The per-round draws are preserved exactly
+    (seeded per (cfg.seed, t)), so a blocked run replays the identical
+    dropout trajectory as the per-round path."""
+    masks = [active_mask(t, n_clients, cfg)
+             for t in range(t0, t0 + n_rounds)]
+    if all(m is None for m in masks):
+        return None
+    return np.stack([np.ones(n_clients, bool) if m is None else m
+                     for m in masks])
+
+
 def stack_states(states: Sequence[Dict]) -> Dict:
     """List of per-client state pytrees -> one pytree with leading K dim."""
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
@@ -161,6 +236,16 @@ def _tree_where(mask_k: jnp.ndarray, new: Dict, old: Dict) -> Dict:
         m = mask_k.reshape((mask_k.shape[0],) + (1,) * (n.ndim - 1))
         return jnp.where(m, n, o)
     return jax.tree_util.tree_map(sel, new, old)
+
+
+def _stack_metric_rows(rows: Sequence[Dict[str, np.ndarray]], n_clients: int
+                       ) -> Dict[str, np.ndarray]:
+    """Per-round metric dicts ([K] arrays) -> one [T, K] array per key
+    (key union, NaN where a round didn't emit that metric)."""
+    keys = set().union(*(r.keys() for r in rows)) if rows else set()
+    nan = np.full(n_clients, np.nan)
+    return {k: np.stack([np.asarray(r.get(k, nan), float) for r in rows])
+            for k in sorted(keys)}
 
 
 def _key_data(key) -> np.ndarray:
@@ -258,6 +343,23 @@ class FederationEngine:
         return p if self.backend == "loop" else jax.tree_util.tree_map(
             lambda x: x[k], p)
 
+    def stacked_params(self, state, role: str = "proxy"):
+        """The whole cohort's ``role`` params with a leading K dim — the
+        input batched evaluation wants. Free on the stacked backends (that
+        IS the state layout); the loop backend stacks on demand, or returns
+        None when the per-client trees differ (heterogeneous architectures
+        cannot be batched — callers fall back to per-client evaluation)."""
+        if self.backend != "loop":
+            return state[role]["params"]
+        trees = [s[role]["params"] for s in state]
+        structs = {jax.tree_util.tree_structure(tr) for tr in trees}
+        shapes = {tuple((x.shape, jnp.result_type(x))
+                        for x in jax.tree_util.tree_leaves(tr))
+                  for tr in trees}
+        if len(structs) != 1 or len(shapes) != 1:
+            return None
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
     def attach_accountants(self, accountants: Sequence) -> None:
         assert len(accountants) == self.K
         self.accountants = list(accountants)
@@ -348,6 +450,98 @@ class FederationEngine:
         for k, acc in enumerate(self.accountants):
             if acc is not None and (act is None or act[k]):
                 acc.step(self.n_steps(data[k]))
+        return state, metrics
+
+    def run_rounds(self, state, data: Sequence, t0: int, n_rounds: int,
+                   key) -> Tuple[Any, Dict[str, np.ndarray]]:
+        """Engine-owned round-block: rounds ``t0 .. t0+n_rounds-1`` with the
+        host re-entered only at the block edge.
+
+        ``key`` is the run's BASE key (not a pre-folded round key): round t
+        steps under ``round_key(key, t)``, folded in-scan, which is exactly
+        the per-round schedule every driver historically used — so any
+        block size replays the identical trajectory bit-for-bit, and a
+        resume landing on a block edge continues it.
+
+        vmap backend: the whole block is ONE compiled XLA program — an
+        outer ``lax.scan`` over rounds around the per-round scan/vmap body,
+        with the block's exchange matrices precomputed host-side as one
+        stacked ``mix_schedule`` [T, K, K] runtime argument (one
+        compilation serves every block of the same shape). shard_map: the
+        per-round collective schedules are trace-time static, so the block
+        is the rounds unrolled inside one jit. loop backend (and
+        ``n_rounds == 1``): per-round semantics, unchanged — the
+        bit-identity reference.
+
+        Dropout (§3.4) replays the per-round ``active_mask`` schedule
+        (``active_schedule``); attached accountants are bulk-stepped once
+        per block (``PrivacyAccountant.step(n)`` over each client's active
+        rounds), which lands on the same counters as per-round stepping.
+
+        shard_map UNDER DROPOUT also takes the per-round path: its
+        collective schedules are trace-time static, so a (typically
+        unique) membership trajectory would compile a fresh T-round
+        unrolled program every block, where per-round execution reuses one
+        cached program per (shift, pattern).
+
+        Returns ``(state, metrics)`` with each metric stacked to
+        ``[n_rounds, K]`` (row i = round t0+i, NaN for inactive clients).
+        """
+        assert n_rounds >= 1, n_rounds
+        if self.backend == "loop" or n_rounds == 1 or (
+                self.backend == "shard_map" and self.cfg.dropout_rate):
+            rows = []
+            for t in range(t0, t0 + n_rounds):
+                state, m = self.run_round(state, data, t, round_key(key, t))
+                rows.append(m)
+            return state, _stack_metric_rows(rows, self.K)
+        return self._rounds_block(
+            state, data, t0, n_rounds, key,
+            active_schedule(t0, n_rounds, self.K, self.cfg))
+
+    def _rounds_block(self, state, data, t0, T, key, act_sched):
+        data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
+            self._stacked_inputs(data)
+        act_stack = (np.ones((T, self.K), bool) if act_sched is None
+                     else act_sched)
+        mixing = self.mix != "none" and self.K > 1
+        Ps = jnp.zeros((T, 1))  # placeholder when no matmul mix runs
+        if self.backend == "vmap":
+            rkey = ("vmap_block", T, n_steps, step_masked, pass_nv)
+            if rkey not in self._rounds:
+                matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,
+                                             P.astype(w.dtype) @ w)
+                self._rounds[rkey] = self._build_block(
+                    T, n_steps, matmul if mixing else None, step_masked,
+                    pass_nv)
+            if mixing:
+                Ps = jnp.asarray(
+                    mix_schedule(self.mix, t0, T, self.K, self.cfg.topology,
+                                 active=act_sched), jnp.float32)
+        else:
+            # full-membership only here (dropout delegated to per-round):
+            # the block's ppermute schedule is just the shift sequence
+            topo, _ = self._mix_topology()
+            shifts = (tuple(int(s) for s in
+                            shift_schedule(t0, T, self.K, topo))
+                      if mixing else (None,) * T)
+            rkey = ("shard_block", T, n_steps, step_masked, pass_nv,
+                    self.mix, shifts)
+            if rkey not in self._rounds:
+                mix_ops = [self._shard_mix_op(t, None) if mixing else None
+                           for t in range(t0, t0 + T)]
+                self._rounds[rkey] = self._build_block(
+                    T, n_steps, mix_ops, step_masked, pass_nv)
+        ts = jnp.arange(t0, t0 + T, dtype=jnp.int32)
+        state, ms = self._rounds[rkey](
+            state, data_s, n_valid, steps_dev, Ps, jnp.asarray(act_stack),
+            ts, key)
+        metrics = {k: np.asarray(v) for k, v in ms.items()}
+        for k, acc in enumerate(self.accountants):
+            if acc is not None:
+                n_active_rounds = int(act_stack[:, k].sum())
+                if n_active_rounds:
+                    acc.step(n_active_rounds * self.n_steps(data[k]))
         return state, metrics
 
     # -- loop backend --------------------------------------------------------
@@ -480,9 +674,9 @@ class FederationEngine:
             "none": (None, None),
         }[self.mix]
 
-    def _build_round(self, n_steps: int, mix_op, step_masked: bool = False,
-                     pass_n_valid: bool = True):
-        """One jitted program for the WHOLE round (``n_steps`` = the scan
+    def _round_core(self, n_steps: int, mix_op, step_masked: bool = False,
+                    pass_n_valid: bool = True):
+        """One traceable program for the WHOLE round (``n_steps`` = the scan
         length, i.e. the cohort-max step count). ``mix_op(flat, w, P) ->
         (mixed, w2)`` is the only backend difference: a [K,K] matmul on the
         stacked proxies (vmap — P is a runtime arg, so every round reuses
@@ -551,7 +745,62 @@ class FederationEngine:
                 trained["w"] = w2.astype(jnp.result_type(trained["w"]))
             return trained, last
 
-        return jax.jit(round_fn, donate_argnums=self._donate)
+        return round_fn
+
+    def _build_round(self, n_steps: int, mix_op, step_masked: bool = False,
+                     pass_n_valid: bool = True):
+        """Jitted single-round program (the ``run_round`` fast path)."""
+        return jax.jit(self._round_core(n_steps, mix_op, step_masked,
+                                        pass_n_valid),
+                       donate_argnums=self._donate)
+
+    def _build_block(self, n_rounds: int, n_steps: int, mix_ops,
+                     step_masked: bool = False, pass_n_valid: bool = True):
+        """One jitted program for a WHOLE round-block (``n_rounds`` federated
+        rounds, host re-entered only at the block edge).
+
+        ``mix_ops`` is either ONE mix_op shared by every round — the vmap
+        matmul path, where the per-round exchange matrix arrives as the
+        runtime-stacked ``Ps[T, K, K]`` and the block is a ``lax.scan`` over
+        rounds (one compilation serves every block of this shape) — or a
+        length-``n_rounds`` sequence of per-round static ops (shard_map,
+        whose ppermute schedules are trace-time static: the block is a
+        Python-unrolled sequence of round bodies inside one jit, exactly
+        the per-round collective schedules fused end to end).
+
+        Per-round RNG keys are folded IN-SCAN from the base key
+        (``round_key(base_key, t)`` with the runtime ``ts`` round indices),
+        so a blocked run replays the per-round key schedule bit-exactly."""
+        if not isinstance(mix_ops, (list, tuple)):
+            core = self._round_core(n_steps, mix_ops, step_masked,
+                                    pass_n_valid)
+
+            def block_fn(stacked, data, n_valid, steps, Ps, acts, ts,
+                         base_key):
+                def body(st, xs):
+                    P, act, t = xs
+                    st2, last = core(st, data, n_valid, steps, P, act,
+                                     round_key(base_key, t))
+                    return st2, last
+
+                return jax.lax.scan(body, stacked, (Ps, acts, ts))
+        else:
+            cores = [self._round_core(n_steps, op, step_masked, pass_n_valid)
+                     for op in mix_ops]
+
+            def block_fn(stacked, data, n_valid, steps, Ps, acts, ts,
+                         base_key):
+                lasts = []
+                for i, core in enumerate(cores):
+                    stacked, last = core(stacked, data, n_valid, steps,
+                                         Ps[i], acts[i],
+                                         round_key(base_key, ts[i]))
+                    lasts.append(last)
+                stacked_ms = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *lasts)
+                return stacked, stacked_ms
+
+        return jax.jit(block_fn, donate_argnums=self._donate)
 
     def _shard_mix_op(self, t: int, act_key):
         """ppermute exchange along ``self.axis``; t/active are trace-time
@@ -564,7 +813,10 @@ class FederationEngine:
             self.mesh, in_specs=(spec, spec), out_specs=(spec, spec))
         return lambda flat, w, P: gossip_sm(flat, w)
 
-    def _round_stacked(self, stacked, data, t, key, act):
+    def _stacked_inputs(self, data):
+        """Shared prologue of the stacked round/block programs: padded
+        device copy, masked-sampler validation, scan length and step-mask
+        staticness derived from the per-client step counts."""
         data_s, n_valid, lengths, steps_arr = self._stack_data(data)
         if lengths is not None and (lengths != lengths[0]).any() \
                 and not self._masked_sampler:
@@ -581,7 +833,12 @@ class FederationEngine:
         # clients genuinely run different step counts (epoch mode on a
         # size-skewed cohort); uniform rounds keep the mask-free body
         step_masked = bool((steps_arr != steps_arr[0]).any())
-        steps_dev = jnp.asarray(steps_arr)
+        return data_s, n_valid, pass_nv, n_steps, step_masked, \
+            jnp.asarray(steps_arr)
+
+    def _round_stacked(self, stacked, data, t, key, act):
+        data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
+            self._stacked_inputs(data)
         act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
         mixing = self.mix != "none" and self.K > 1
         P = jnp.zeros((0,))  # placeholder when no matmul mix runs

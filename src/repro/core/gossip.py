@@ -134,6 +134,104 @@ def debias(thetas: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# block schedules: P^(t0), ..., P^(t0+T-1) precomputed for a round-block
+
+
+def shift_schedule(t0: int, T: int, n_active: int,
+                   topology: str = "exponential") -> np.ndarray:
+    """int[T] gossip shifts for rounds t0..t0+T-1 over ``n_active`` peers
+    (-1 is the dense sentinel, matching :func:`gossip_shift`)."""
+    ts = np.arange(t0, t0 + T)
+    if n_active <= 1:
+        return np.zeros(T, np.int64)
+    if topology == "exponential":
+        offs = np.asarray(exponential_offsets(n_active))
+        return offs[ts % len(offs)]
+    if topology == "ring":
+        return np.ones(T, np.int64)
+    if topology == "full":
+        return -np.ones(T, np.int64)
+    raise ValueError(topology)
+
+
+def adjacency_schedule(t0: int, T: int, n_clients: int,
+                       topology: str = "exponential",
+                       self_weight: float = 0.5, active=None) -> np.ndarray:
+    """Stacked column-stochastic P^(t0..t0+T-1): float64[T, K, K], with
+    ``P[i] == adjacency_matrix(t0 + i, ...)`` exactly.
+
+    ``active`` is None (everyone, every round) or bool[T, K] — one §3.4
+    membership row per round. Construction is vectorized: rounds sharing a
+    membership pattern are built together with batched scatters (no
+    per-client Python loops), so a round-block's whole schedule costs a
+    handful of numpy ops instead of T × K loop iterations.
+    """
+    K = n_clients
+    P = np.broadcast_to(np.eye(K), (T, K, K)).copy()
+    if K == 1 or T == 0:
+        return P
+    ts = np.arange(t0, t0 + T)
+    if active is None:
+        groups = [(np.arange(K), np.arange(T))]
+    else:
+        active = np.asarray(active, bool)
+        assert active.shape == (T, K), (active.shape, (T, K))
+        patterns, inverse = np.unique(active, axis=0, return_inverse=True)
+        groups = [(np.where(patterns[g])[0], np.where(inverse == g)[0])
+                  for g in range(len(patterns))]
+    for idx, rows in groups:
+        A = len(idx)
+        if A <= 1:
+            continue  # inactive-heavy round: identity (already in place)
+        if topology == "exponential":
+            offs = np.asarray(exponential_offsets(A))
+            shifts = offs[ts[rows] % len(offs)]
+        elif topology == "ring":
+            shifts = np.ones(len(rows), np.int64)
+        elif topology == "full":
+            shifts = -np.ones(len(rows), np.int64)
+        else:
+            raise ValueError(topology)
+        dense = shifts == -1
+        if dense.any():
+            P[np.ix_(rows[dense], idx, idx)] = 1.0 / A
+        sparse = np.where(~dense)[0]
+        if len(sparse):
+            r = np.repeat(rows[sparse], A)
+            col = np.tile(idx, len(sparse))
+            P[r, col, col] = self_weight
+            pos = np.arange(A)
+            peers = idx[(pos[None, :] + shifts[sparse, None]) % A]
+            np.add.at(P, (r, peers.reshape(-1), col), 1.0 - self_weight)
+    assert np.allclose(P.sum(axis=1), 1.0)  # column-stochastic, every round
+    return P
+
+
+def mix_schedule(mix: str, t0: int, T: int, n_clients: int,
+                 topology: str = "exponential", active=None,
+                 self_weight: float = 0.5) -> np.ndarray:
+    """Stacked mixing matrices for one round-block: float64[T, K, K] with
+    ``out[i] == mix_matrix(mix, t0 + i, ...)`` exactly (same mix -> graph
+    mapping as :func:`mix_matrix`; ``active`` is None or bool[T, K]).
+
+    This is the host-side half of the engine's fused round-block execution:
+    instead of re-entering Python every round to build P^(t), a block's
+    whole schedule is precomputed once and fed to the compiled scan as one
+    [T, K, K] runtime argument."""
+    if mix == "none":
+        return np.broadcast_to(np.eye(n_clients), (T, n_clients, n_clients)).copy()
+    if mix == "pushsum":
+        return adjacency_schedule(t0, T, n_clients, topology, self_weight,
+                                  active)
+    if mix == "mean":
+        return adjacency_schedule(t0, T, n_clients, "full", self_weight,
+                                  active)
+    if mix == "ring":
+        return adjacency_schedule(t0, T, n_clients, "ring", 0.0, active)
+    raise ValueError(mix)
+
+
+# ---------------------------------------------------------------------------
 # distributed backend: one client per mesh-axis index, ppermute exchange
 
 

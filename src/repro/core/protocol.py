@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ProxyFLConfig
 from ..nn.losses import cross_entropy, dml_loss
@@ -234,3 +235,31 @@ def evaluate(spec: ModelSpec, params, x, y, batch: int = 512) -> float:
         logits = apply(params, x[i : i + batch])
         correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
     return correct / x.shape[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _eval_apply_batched(spec: ModelSpec):
+    """Jitted cohort-batched ``spec.apply``: params carry a leading client
+    dim, the eval batch is shared — the whole cohort's correct-counts come
+    back as ONE [K] array instead of K sequential device->host pulls."""
+    def batched(stacked_params, x, y):
+        logits = jax.vmap(spec.apply, in_axes=(0, None))(stacked_params, x)
+        return jnp.sum(jnp.argmax(logits, -1) == y[None, :], axis=1)
+
+    return jax.jit(batched)
+
+
+def evaluate_batched(spec: ModelSpec, stacked_params, x, y,
+                     batch: int = 512) -> List[float]:
+    """Test accuracy of every client at once (stacked [K, ...] params,
+    shared test set). Per eval batch the correct-counts accumulate ON
+    DEVICE; the single [K] host pull happens once at the end — the
+    round-block counterpart of :func:`evaluate` (which pulls a float per
+    client per batch)."""
+    apply = _eval_apply_batched(spec)
+    correct = None
+    for i in range(0, x.shape[0], batch):
+        c = apply(stacked_params, x[i : i + batch], y[i : i + batch])
+        correct = c if correct is None else correct + c
+    counts = np.asarray(correct)
+    return [float(c) / x.shape[0] for c in counts]

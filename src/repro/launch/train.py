@@ -9,10 +9,15 @@ architecture, on synthetic non-IID language-modelling data.
 Rounds are executed by :class:`repro.core.engine.FederationEngine`
 driving ``make_train_step``: with the default ``--backend vmap`` the whole
 round (scan over local steps × vmap over clients × on-device PushSum
-matmul) is ONE compiled XLA program; ``--backend loop`` keeps the
-per-client dispatch (useful for debugging / heterogeneous experiments).
-``--dropout-rate`` exercises the §3.4 dropout/join scenario: clients sit
-rounds out and the time-varying gossip graph re-knits around them.
+matmul) is ONE compiled XLA program; ``--rounds-per-block B`` goes
+further and fuses B consecutive rounds into one engine round-block (outer
+scan over rounds, stacked ``mix_schedule`` exchange matrices, in-scan RNG
+folding) so the host syncs only at block edges — bit-identical to
+per-round execution, with checkpoints landing on block edges.
+``--backend loop`` keeps the per-client dispatch (useful for debugging /
+heterogeneous experiments). ``--dropout-rate`` exercises the §3.4
+dropout/join scenario: clients sit rounds out and the time-varying gossip
+graph re-knits around them.
 
 On CPU this runs the reduced (smoke) variant of the chosen architecture;
 the full-size configs are exercised through ``dryrun.py``. The default
@@ -47,7 +52,7 @@ from ..configs import list_archs, get_config
 from ..configs.base import DPConfig, LayerSpec, ModelConfig, ProxyFLConfig
 from ..configs.registry import proxy_of, smoke_variant
 from ..core.accountant import PrivacyAccountant
-from ..core.engine import FederationEngine
+from ..core.engine import FederationEngine, block_spans
 from ..data.synthetic import make_lm_data
 from ..nn.losses import cross_entropy
 from ..nn.model import forward
@@ -109,6 +114,12 @@ def main(argv=None) -> int:
                          "mesh, see dryrun.py)")
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client dropout probability (§3.4)")
+    ap.add_argument("--rounds-per-block", type=int, default=1,
+                    help="rounds fused into one compiled engine round-block "
+                         "(vmap backend: the host is re-entered only at "
+                         "block edges; 1 = historical per-round execution; "
+                         "any value is bit-identical, checkpoints land on "
+                         "block edges)")
     ap.add_argument("--size-skew", type=float, default=0.0,
                     help="per-client corpus size skew in [0, 1): client k "
                          "holds ~64*(1-skew)^k sequences, a ragged cohort "
@@ -197,24 +208,32 @@ def main(argv=None) -> int:
                 print(f"[train] resumed from {args.checkpoint_dir} at "
                       f"round {start}")
 
-    for t in range(start, args.rounds):
+    # engine-owned round-blocks: up to --rounds-per-block rounds run as one
+    # compiled program; the host syncs (checkpoint, ppl eval, logging) only
+    # at block edges, and block_spans cuts blocks so every checkpoint-
+    # cadence round IS a block edge — the snapshot set matches per-round
+    # execution.
+    for t, n_block in block_spans(start, args.rounds, args.rounds_per_block,
+                                  ckpt.every if ckpt is not None else 0):
         t0 = time.time()
-        rk = jax.random.fold_in(key, 10_000 + t)
-        state, metrics = engine.run_round(state, data, t, rk)
+        state, metrics = engine.run_rounds(state, data, t, n_block, key)
         if ckpt is not None:
-            ckpt.maybe_save(engine, state, t, base_key=key)
+            ckpt.maybe_save(engine, state, t + n_block - 1, base_key=key)
+        dt = time.time() - t0
         ppl = evaluate_ppl(engine.client_params(state, 0, "private"), cfg, test)
         # worst case over clients: under --size-skew the smallest client has
         # the largest sample rate and spends epsilon fastest
         eps = max((a.epsilon() for a in engine.accountants if a is not None),
                   default=float("nan"))
-        n_active = int(np.sum(~np.isnan(metrics["private_loss"])))
-        print(f"[round {t+1}/{args.rounds}] "
-              f"private_loss={np.nanmean(metrics['private_loss']):.4f} "
-              f"proxy_loss={np.nanmean(metrics['proxy_loss']):.4f} "
-              f"active={n_active}/{K} "
-              f"client0_test_ppl={ppl:.2f} eps={eps:.3f} "
-              f"({time.time()-t0:.1f}s)")
+        for i in range(n_block):
+            n_active = int(np.sum(~np.isnan(metrics["private_loss"][i])))
+            line = (f"[round {t+i+1}/{args.rounds}] "
+                    f"private_loss={np.nanmean(metrics['private_loss'][i]):.4f} "
+                    f"proxy_loss={np.nanmean(metrics['proxy_loss'][i]):.4f} "
+                    f"active={n_active}/{K} ")
+            if i == n_block - 1:  # block edge: host-synced ppl/eps/time
+                line += f"client0_test_ppl={ppl:.2f} eps={eps:.3f} ({dt:.1f}s)"
+            print(line)
     return 0
 
 

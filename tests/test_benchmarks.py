@@ -1,7 +1,9 @@
 """Benchmark-harness regressions: process-independent synthetic task seeds
 (crc32, not salted ``hash()``), ragged Dirichlet federation_data (no
-truncation, disjoint, nonempty), and per-method proxy-accuracy aggregation
-across seeds in ``bench_methods``."""
+truncation, disjoint, nonempty), per-method proxy-accuracy aggregation
+across seeds in ``bench_methods``, and the run.py registry staying in sync
+with the fig_* modules on disk."""
+import glob
 import os
 import subprocess
 import sys
@@ -13,6 +15,29 @@ import pytest
 import benchmarks.common as common
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.fast
+def test_run_registry_lists_every_fig_module(capsys):
+    """Every fig_* benchmark module present on disk must be registered in
+    ``benchmarks.run.MODULES`` and appear in ``run.py --list`` with a
+    one-line description — new figures can't be silently unregistered."""
+    import benchmarks.run as run
+    on_disk = {os.path.basename(p)[:-3] for p in
+               glob.glob(os.path.join(REPO, "benchmarks", "fig*.py"))}
+    assert on_disk, "no fig_* modules found — wrong repo layout?"
+    missing = on_disk - set(run.MODULES)
+    assert not missing, f"fig modules not registered in run.py: {missing}"
+
+    assert run.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    lines = {l.split(":", 1)[0]: l.split(":", 1)[1].strip()
+             for l in out.strip().splitlines()}
+    assert set(lines) == set(run.MODULES)
+    for name in on_disk:
+        assert name in lines, f"{name} absent from --list output"
+        # "[anchor] docstring first line" — both halves non-trivial
+        assert len(lines[name]) > len("[x] "), f"{name}: empty description"
 
 
 def test_task_seed_is_process_independent():

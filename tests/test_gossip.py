@@ -7,9 +7,10 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, st
 
-from repro.core.gossip import (adjacency_matrix, comm_cost_per_round, debias,
+from repro.core.gossip import (adjacency_matrix, adjacency_schedule,
+                               comm_cost_per_round, debias,
                                exponential_offsets, gossip_shift, mix_matrix,
-                               pushsum_mix)
+                               mix_schedule, pushsum_mix, shift_schedule)
 
 pytestmark = pytest.mark.fast  # host-side graph algebra, no model compiles
 
@@ -76,6 +77,70 @@ def test_gossip_shift_matches_adjacency(t, K):
     P = adjacency_matrix(t, K, "exponential")
     for k in range(K):
         assert P[(k + s) % K, k] > 0
+
+
+# ---------------------------------------------------------------------------
+# block schedules: the stacked P^(t0..t0+T) the round-block scan consumes
+
+
+@given(st.integers(0, 40), st.integers(1, 12), st.integers(1, 17),
+       st.sampled_from(["exponential", "ring", "full"]),
+       st.sampled_from(["pushsum", "mean", "ring", "none"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_mix_schedule_matches_per_round_matrices(t0, T, K, topology, mix,
+                                                 mask_seed):
+    """The vectorized block schedule must equal the per-t host matrices
+    EXACTLY — same floats, bit for bit — for every (mix, topology) pair
+    under a random §3.4 active-mask trajectory, and stay column-stochastic
+    every round. This is the host-side half of blocked == per-round
+    bit-identity."""
+    rng = np.random.default_rng(mask_seed)
+    active = rng.random((T, K)) < 0.7
+    active[~active.any(axis=1), 0] = True  # every round keeps >= 1 client
+    for act in (None, active):
+        S = mix_schedule(mix, t0, T, K, topology, active=act)
+        assert S.shape == (T, K, K)
+        np.testing.assert_allclose(S.sum(axis=1), 1.0, atol=1e-12)
+        for i in range(T):
+            a_t = None if (act is None or mix == "none") else act[i]
+            np.testing.assert_array_equal(
+                S[i], mix_matrix(mix, t0 + i, K, topology, a_t),
+                err_msg=f"{mix}/{topology} K={K} t0={t0} round {i}")
+
+
+def test_mix_schedule_matches_per_round_matrices_deterministic():
+    """Pinned-case twin of the property test so the invariant is exercised
+    even where hypothesis is unavailable (see tests/_hypothesis_compat)."""
+    rng = np.random.default_rng(7)
+    for mix in ("pushsum", "mean", "ring", "none"):
+        for topology in ("exponential", "ring", "full"):
+            for K, t0, T in ((1, 0, 3), (2, 5, 4), (8, 2, 7), (16, 31, 5)):
+                active = rng.random((T, K)) < 0.6
+                active[~active.any(axis=1), 0] = True
+                for act in (None, active):
+                    S = mix_schedule(mix, t0, T, K, topology, active=act)
+                    np.testing.assert_allclose(S.sum(axis=1), 1.0,
+                                               atol=1e-12)
+                    for i in range(T):
+                        a_t = (None if (act is None or mix == "none")
+                               else act[i])
+                        np.testing.assert_array_equal(
+                            S[i], mix_matrix(mix, t0 + i, K, topology, a_t),
+                            err_msg=f"{mix}/{topology} K={K} t0={t0} i={i}")
+
+
+def test_adjacency_schedule_rejects_bad_mask_shape():
+    with pytest.raises(AssertionError):
+        adjacency_schedule(0, 3, 4, active=np.ones((2, 4), bool))
+
+
+def test_shift_schedule_matches_gossip_shift():
+    for topology in ("exponential", "ring", "full"):
+        for A in (1, 2, 5, 9):
+            s = shift_schedule(3, 10, A, topology)
+            assert s.shape == (10,)
+            for i in range(10):
+                assert s[i] == gossip_shift(3 + i, A, topology)
 
 
 def test_comm_cost_scaling():
