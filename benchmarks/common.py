@@ -125,7 +125,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   sigma: float = 1.0, clip: float = 1.0,
                   n_train_factor: float = 1.0,
                   backend: str = None, dropout_rate: float = 0.0,
-                  rounds_per_block: int = 0,
+                  rounds_per_block: int = 0, staleness: int = 0,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
                   resume: bool = None
                   ) -> List[Dict]:
@@ -135,7 +135,10 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     turns on the §3.4 per-round dropout/join scenario. ``rounds_per_block``
     (env ``REPRO_BENCH_BLOCK``) fuses that many rounds into one compiled
     engine round-block — bit-identical results, fewer host round-trips; 0/1
-    keep the historical per-round execution.
+    keep the historical per-round execution. ``staleness`` (env
+    ``REPRO_BENCH_STALENESS``) sets the gossip delay τ of the async
+    backend (only meaningful with ``backend="async"``; τ=0 reproduces the
+    vmap backend bit-identically).
 
     ``checkpoint_dir`` makes every (method, seed) run snapshot its complete
     federation state every ``checkpoint_every`` rounds under
@@ -146,6 +149,14 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     ``REPRO_BENCH_RESUME``."""
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
     rounds_per_block = rounds_per_block or _env_int("REPRO_BENCH_BLOCK") or 1
+    staleness = staleness or _env_int("REPRO_BENCH_STALENESS")
+    if staleness and backend != "async":
+        # same guard as train.py: a silently-ignored τ would let a sweep
+        # report synchronous results as stale-gossip measurements
+        raise SystemExit(
+            f"staleness={staleness} requires backend='async' "
+            f"(got {backend!r}; the synchronous backends deliver every "
+            "round) — set REPRO_BENCH_BACKEND=async")
     checkpoint_dir = checkpoint_dir or os.environ.get("REPRO_BENCH_CKPT_DIR")
     checkpoint_every = checkpoint_every or _env_int("REPRO_BENCH_CKPT_EVERY")
     if resume is None:
@@ -170,7 +181,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
             cfg = ProxyFLConfig(
                 alpha=alpha, beta=alpha, n_clients=n_clients, rounds=rounds,
                 batch_size=max(1, min(batch_size, mean_n)),
-                seed=seed, dropout_rate=dropout_rate,
+                seed=seed, dropout_rate=dropout_rate, staleness=staleness,
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
             res = run_federated(
                 method, [priv] * n_clients, prox, client_data, test, cfg,

@@ -1,0 +1,110 @@
+"""Async stale gossip: rounds/sec and final proxy accuracy vs staleness τ.
+
+The synchronous PushSum exchange blocks every client on its in-neighbor's
+CURRENT proxy, so one straggler stalls the cohort. The engine's ``async``
+backend delivers proxy mass put in flight τ rounds earlier instead
+(Assran et al. 2019's overlap trick; see ``repro.core.engine``), letting
+communication hide behind the next τ local scans. Staleness is a
+semantics knob, not a free lunch: the mix consumes τ-round-old
+information, so consensus — and with it proxy accuracy — can lag. This
+figure quantifies the trade on the paper-style synthetic task: for
+τ ∈ {0, 1, 2, 4}, final MEAN proxy and private accuracy of a ProxyFL
+federation against the synchronous (vmap) reference, plus simulator
+rounds/sec (the buffer machinery's overhead; the wall-clock WIN of
+asynchrony — not stalling on stragglers — is a property of a real
+deployment, which a single-host simulator cannot exhibit).
+
+τ=0 must reproduce the sync reference EXACTLY (bit-identity is enforced
+by tests/test_conformance.py; here it shows up as acc_delta_vs_sync == 0).
+Small τ (≤ 2) tracking the reference within seed noise is the evidence
+behind the ROADMAP's "when is τ accuracy-safe" guidance.
+
+Results are also written as JSON (``REPRO_BENCH_ASYNC_JSON``, default
+``fig_async.json`` in the CWD) including ``acc_delta_vs_sync`` per τ.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import run_federated
+from repro.core.engine import dml_engine
+
+from .common import FULL, federation_data, spec_of
+
+STALENESS = (0, 1, 2, 4)
+
+
+def _time_rounds(engine, data, key, rounds: int, trials: int = 3) -> float:
+    """Steady-state seconds per round driving ``rounds`` rounds as one
+    engine block (compile excluded via a warm-up block; best of
+    ``trials``, the contention-robust throughput measure)."""
+    state = engine.init_states(key)
+    state, _ = engine.run_rounds(state, data, 0, rounds, key)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    ts = []
+    for _ in range(trials):
+        state = engine.init_states(key)
+        t0 = time.time()
+        state, _ = engine.run_rounds(state, data, 0, rounds, key)
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        ts.append((time.time() - t0) / rounds)
+    return float(np.min(ts))
+
+
+def run(full: bool = FULL):
+    n_clients = 8 if full else 4
+    rounds = 30 if full else 12
+    seeds = (0, 1, 2) if full else (0,)
+    dataset = "mnist"
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    sync_proxy = None
+    for tau in STALENESS:
+        accs, paccs = [], []
+        for seed in seeds:
+            client_data, test, d = federation_data(
+                dataset, n_clients, seed,
+                n_train_factor=1.0 if full else 0.2)
+            spec = spec_of("mlp", d["shape"], d["n_classes"])
+            cfg = ProxyFLConfig(
+                n_clients=n_clients, rounds=rounds, local_steps=2,
+                batch_size=64, seed=seed, staleness=tau,
+                dp=DPConfig(enabled=False))
+            backend = "vmap" if tau == 0 else "async"
+            res = run_federated(
+                "proxyfl", [spec] * n_clients, spec, client_data, test,
+                cfg, seed=seed, eval_every=rounds, backend=backend,
+                rounds_per_block=rounds)
+            row = res["history"][-1]
+            accs.extend(row["private_acc"])
+            paccs.extend(row["proxy_acc"])
+            if seed == seeds[0]:
+                # throughput on the same cohort: whole horizon as ONE block
+                eng = dml_engine((spec,) * n_clients, spec, cfg,
+                                 backend=backend)
+                sec = _time_rounds(eng, client_data, key, rounds)
+        proxy_mean = float(np.mean(paccs))
+        if tau == 0:
+            sync_proxy = proxy_mean
+        rows.append({
+            "dataset": dataset, "clients": n_clients, "rounds": rounds,
+            "staleness": tau, "backend": "vmap (sync ref)" if tau == 0
+            else "async",
+            "proxy_acc_mean": round(proxy_mean, 4),
+            "proxy_acc_std": round(float(np.std(paccs)), 4),
+            "private_acc_mean": round(float(np.mean(accs)), 4),
+            "acc_delta_vs_sync": round(proxy_mean - sync_proxy, 4),
+            "sec_per_round": round(sec, 5),
+            "rounds_per_sec": round(1.0 / sec, 2),
+        })
+    path = os.environ.get("REPRO_BENCH_ASYNC_JSON", "fig_async.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

@@ -3,15 +3,17 @@
 #
 #   scripts/ci.sh             # full tier-1 run (ROADMAP verify command)
 #   scripts/ci.sh --fast      # only tests marked @pytest.mark.fast; includes
-#                             # the ragged-cohort smoke (tests/test_ragged.py)
-#                             # and the round-block bit-identity smoke
-#                             # (tests/test_blocks.py: blocked == per-round,
-#                             # params and epsilon, loop AND vmap) so every
-#                             # PR exercises both compiled paths
+#                             # the fast slice of the cross-backend
+#                             # conformance matrix (tests/test_conformance.py:
+#                             # loop==vmap, ragged-on-vmap, blocked==per-round
+#                             # bitwise, the async-τ0==vmap equivalence smoke
+#                             # and async-τ2 block/resume bit-identity) so
+#                             # every PR exercises every compiled path
 #   scripts/ci.sh --smoke     # resume-correctness smoke: 4-client federation
 #                             # killed after round 2 of 3 and resumed (per-
-#                             # round AND rounds_per_block=2 kill-after-block)
-#                             # must be bit-identical to uninterrupted runs
+#                             # round, rounds_per_block=2 kill-after-block,
+#                             # AND the async-τ2 stale-buffer scenario) must
+#                             # be bit-identical to uninterrupted runs
 #   scripts/ci.sh --shard I/N # deterministic 1-based slice of the test FILES
 #                             # (sorted, round-robin) — the GitHub workflow
 #                             # matrixes the full suite across shards; the
@@ -35,7 +37,7 @@ if [[ "${1:-}" == "--fast" ]]; then
   shift
 elif [[ "${1:-}" == "--smoke" ]]; then
   shift
-  echo "== smoke: checkpoint/resume bit-identity (incl. round-blocks) =="
+  echo "== smoke: checkpoint/resume bit-identity (round-blocks + async-τ2) =="
   python scripts/resume_smoke.py
   echo "CI OK"
   exit 0
@@ -47,6 +49,17 @@ fi
 XDIST=""
 if python -c "import xdist" >/dev/null 2>&1; then
   XDIST="-n auto"
+fi
+
+# Property tests (hypothesis) skip cleanly when the library is absent
+# (tests/_hypothesis_compat); -rs below makes pytest print the counted
+# skip-reason summary so the logs record exactly what did not run.
+if python -c "import hypothesis" >/dev/null 2>&1; then
+  echo "== property tests: hypothesis available =="
+else
+  echo "== property tests: hypothesis NOT installed — property-based tests"
+  echo "   will be SKIPPED (pinned deterministic twins still run; see the"
+  echo "   'property test skipped' count in the pytest skip summary) =="
 fi
 
 if [[ -n "$SHARD" ]]; then
@@ -66,7 +79,7 @@ if [[ -n "$SHARD" ]]; then
   fi
   echo "== tier-1 shard $SHARD: pytest$FILES =="
   # shellcheck disable=SC2086  # FILES/XDIST intentionally word-split
-  python -m pytest -x -q $XDIST $FILES "$@"
+  python -m pytest -x -q -rs $XDIST $FILES "$@"
   if [[ "$I" == "1" ]]; then
     echo "== example: quickstart (headless) =="
     python examples/quickstart.py
@@ -77,7 +90,7 @@ fi
 
 echo "== tier-1: pytest =="
 # shellcheck disable=SC2086  # MARK/XDIST intentionally word-split
-python -m pytest -x -q $MARK $XDIST "$@"
+python -m pytest -x -q -rs $MARK $XDIST "$@"
 
 echo "== example: quickstart (headless) =="
 python examples/quickstart.py

@@ -21,6 +21,13 @@ whole blocks compiled as one XLA program, snapshots on block edges — is
 killed after the first block, resumed, and must still land bit-identically
 on the per-round reference trajectory.
 
+Finally the ASYNC (stale gossip) backend: a staleness-2 federation whose
+uninterrupted reference fuses the whole horizon into ONE block is killed
+at a checkpoint edge in the middle of that block structure and resumed.
+With τ=2 every post-resume round consumes proxy mass recorded BEFORE the
+kill, so bit-identity here proves the τ-deep in-flight buffer round-trips
+through the checkpoint exactly.
+
     PYTHONPATH=src python scripts/resume_smoke.py
 """
 import dataclasses
@@ -117,6 +124,40 @@ def run_blocked() -> None:
           f"kill-after-block resume is bit-identical to the per-round run")
 
 
+def run_async_stale() -> None:
+    """Kill-mid-block at staleness τ=2: the uninterrupted reference runs
+    the WHOLE 6-round horizon as one fused async block; the killed run
+    checkpoints every 2 rounds (block edges cut to the cadence) and dies
+    at round 4 — mid the reference's block structure. The resume replays
+    rounds 5-6, whose stale mix consumes sends recorded at rounds 3-4,
+    i.e. delivery mass that only exists if ``stale_theta``/``stale_w``
+    were restored from the snapshot. Must match the reference bit-for-bit
+    (params AND epsilon)."""
+    spec, data, test, cfg = build_federation()
+    cfg = dataclasses.replace(cfg, rounds=6, staleness=2)
+    run = lambda c, B, **kw: run_federated(
+        "proxyfl", [spec] * K, spec, data, test, c, seed=0,
+        eval_every=c.rounds, backend="async", rounds_per_block=B, **kw)
+    reference = run(cfg, cfg.rounds)  # whole horizon: ONE compiled block
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = dict(checkpoint_dir=d, checkpoint_every=2)
+        run(dataclasses.replace(cfg, rounds=4), cfg.rounds, **ckpt)  # killed
+        resumed = run(cfg, cfg.rounds, resume=True, **ckpt)
+
+    failures = []
+    for role in ("proxy_params", "private_params"):
+        if not np.array_equal(flat(reference, role), flat(resumed, role)):
+            failures.append(f"{role} differ after async-stale resume")
+    if reference["epsilon"] != resumed["epsilon"]:
+        failures.append(f"epsilon differs: {reference['epsilon']} != "
+                        f"{resumed['epsilon']}")
+    if failures:
+        raise SystemExit("[resume-smoke:async-t2] FAIL: "
+                         + "; ".join(failures))
+    print("[resume-smoke:async-t2] OK — staleness-2 kill-mid-block resume "
+          "is bit-identical (in-flight buffer restored from the snapshot)")
+
+
 def main() -> int:
     finals = {b: run_backend(b) for b in ("vmap", "loop")}
     np.testing.assert_allclose(finals["vmap"], finals["loop"],
@@ -124,6 +165,7 @@ def main() -> int:
                                err_msg="loop/vmap resumed runs diverged")
     print("[resume-smoke] OK — loop and vmap resumed trajectories agree")
     run_blocked()
+    run_async_stale()
     return 0
 
 

@@ -238,6 +238,12 @@ class ProxyFLConfig:
     # (no local steps, no gossip; the time-varying graph adapts around it).
     dropout_rate: float = 0.0
     min_active: int = 1  # floor on participating clients per round
-    # Federation execution backend: "auto" | "loop" | "vmap" | "shard_map"
+    # Federation execution backend:
+    # "auto" | "loop" | "vmap" | "shard_map" | "async"
     # (see repro.core.engine.FederationEngine for the selection guide).
     backend: str = "auto"
+    # Gossip staleness τ for backend="async": the round-t exchange delivers
+    # neighbor proxy mass captured τ rounds earlier (in-flight until then),
+    # modeling communication overlapped with the local scan (Assran et al.
+    # 2019). 0 = synchronous delivery — bit-identical to the vmap backend.
+    staleness: int = 0

@@ -23,14 +23,17 @@ executed in engine-owned ROUND-BLOCKS (``_drive_blocks``: up to
 ``rounds_per_block`` rounds fused into one compiled program, host re-
 entered only at block edges, eval/checkpoint cadences cut to block edges
 — bit-identical to per-round execution at any block size). The engine
-``backend`` ("loop" | "vmap" | "shard_map") is selectable per call or via
-``ProxyFLConfig.backend``; "auto" compiles the whole round into one XLA
-program (vmap) whenever the cohort is homogeneous — ragged (size-skewed,
-e.g. Dirichlet-partitioned) datasets included, via padding + masked
-sampling — and falls back to the per-client loop only for heterogeneous
-architectures or genuinely incompatible data trees.
-``ProxyFLConfig.dropout_rate`` makes clients drop in/out per round (§3.4)
-on every backend.
+``backend`` ("loop" | "vmap" | "shard_map" | "async") is selectable per
+call or via ``ProxyFLConfig.backend``; "auto" compiles the whole round
+into one XLA program (vmap) whenever the cohort is homogeneous — ragged
+(size-skewed, e.g. Dirichlet-partitioned) datasets included, via padding
++ masked sampling — and falls back to the per-client loop only for
+heterogeneous architectures or genuinely incompatible data trees.
+``backend="async"`` swaps the synchronous exchange for staleness-τ gossip
+(``ProxyFLConfig.staleness``; τ=0 is bit-identical to vmap, τ>0 delivers
+neighbor proxies τ rounds late — see the async section of
+``repro.core.engine``). ``ProxyFLConfig.dropout_rate`` makes clients drop
+in/out per round (§3.4) on every backend.
 """
 from __future__ import annotations
 
@@ -68,10 +71,20 @@ def _resolve_backend(backend, cfg: ProxyFLConfig, client_data) -> str:
     """Honest ``auto``: ragged (size-skewed) cohorts stay on the compiled
     stacked path — the engine pads and mask-samples them — and only
     *genuinely incompatible* per-client trees (different structure, dtypes
-    or trailing dims) fall back to the Python loop."""
+    or trailing dims) fall back to the Python loop. ``async`` (stale
+    gossip, ``cfg.staleness``) is explicit opt-in — ``auto`` never changes
+    the protocol's delivery semantics — and, being a stacked backend, has
+    no loop fallback: incompatible trees are an error, not a silent
+    switch to synchronous execution."""
     backend = backend or cfg.backend or "auto"
     if backend == "auto" and not pad_compatible(client_data):
         return "loop"
+    if backend == "async" and not pad_compatible(client_data):
+        raise ValueError(
+            "backend='async' runs on the stacked path and needs identical "
+            "or pad-compatible per-client data trees; genuinely "
+            "incompatible trees have no stale-gossip execution "
+            "(backend='loop' would silently change the exchange semantics)")
     return backend
 
 

@@ -43,11 +43,42 @@ round once, behind three selectable backends:
     the active pattern are trace-time static (each distinct membership
     pattern compiles its own collective schedule).
 
+``async`` (stale gossip, Assran et al. 2019)
+    The overlap-friendly fourth backend: instead of blocking on the
+    in-neighbor's CURRENT proxy, round t's exchange delivers the proxy
+    mass neighbors put in flight τ rounds earlier (``cfg.staleness``),
+    modeling gossip overlapped with the next τ local scans — the
+    synchronous protocol's straggler stall removed. Mechanically it is the
+    vmap backend with the exchange split by
+    :func:`repro.core.gossip.stale_mix_split`: each client KEEPS the
+    diagonal of P^(t) applied to its raw PushSum numerator θ = z·w, SENDS
+    the off-diagonal part into a τ-deep in-flight buffer, and MERGES the
+    round-(t−τ) deliveries; de-biasing by the identically-delayed weights
+    w keeps z a proper weighted average at every staleness, and total
+    θ/w mass (clients + buffer) is conserved under arbitrary τ and §3.4
+    dropout — see the stale-gossip note in ``repro.core.gossip``. The
+    buffer is part of the engine state (``{"clients", "stale_theta",
+    "stale_w"}``), travels through checkpoints, and rotates inside the
+    round-block scan, so any block size and any kill/resume replays the
+    identical trajectory bit-for-bit. τ=0 means immediate delivery: the
+    engine then runs the vmap round program VERBATIM (same compiled
+    program, unwrapped state), so ``staleness=0`` is bit-identical to
+    ``backend="vmap"`` — params and epsilon — by construction (enforced
+    by tests/test_conformance.py). Local-step RNG, batch draws and the DP
+    accountant schedule are untouched by τ (staleness delays delivery,
+    never compute), so epsilon is independent of τ. Semantics notes:
+    inactive (§3.4) clients run no local steps and send nothing, but
+    in-flight mass addressed to them still arrives (a mailbox merge —
+    dropping it would destroy PushSum mass); the pure-permutation
+    ``ring`` mix (CWT) keeps no self mass, so τ>0 would leave clients
+    model-less for τ rounds — rejected at construction.
+
 Backend selection guide
 -----------------------
 * heterogeneous private models            -> ``loop`` (forced)
 * homogeneous cohort, one host            -> ``vmap``
 * one client per device/pod on a mesh     -> ``shard_map``
+* straggler-tolerant stale gossip         -> ``async`` (+ ``staleness``)
 * ``"auto"``                              -> ``vmap`` when client states
   share one tree structure and the per-client data trees are
   *pad-compatible* (same structure, dtypes and trailing dims; leading
@@ -89,7 +120,19 @@ variants (clients gossiping stale proxies while the next local scan runs,
 Assran et al.) need the engine — not the caller — to own a multi-round
 horizon inside which rounds may interleave, while the block edge stays
 the only point where external observers (checkpointer, evaluator,
-membership changes) interact with the federation.
+membership changes) interact with the federation. The ``async`` backend
+is exactly that fourth backend: rounds interleave INSIDE a block through
+the τ-deep in-flight buffer carried in the block scan's state, while the
+block edge stays the only host-visible boundary — the buffer is snapshot
+and restored there, so kill/resume stays bit-identical at any τ. When is
+τ>0 accuracy-safe? ``benchmarks/fig_async.py`` measures final proxy
+accuracy and rounds/sec vs τ ∈ {0, 1, 2, 4}: private accuracy is
+unaffected at any τ (the local DML schedule is untouched — only delivery
+is delayed), and small staleness (τ ≤ 2) reaches the synchronous
+reference's proxy accuracy given a modestly longer horizon (measured:
+equal at 40 rounds on the synthetic MNIST task, where the sync run
+converges by ~30), while large τ (≥ 4) visibly slows consensus — mix
+information is τ rounds old — and needs proportionally more rounds.
 
 Dropout/join (paper §3.4): every backend threads an ``active`` bool mask
 through the round — inactive clients run no local steps, keep their state,
@@ -132,9 +175,10 @@ from ..data.ragged import pad_compatible, pad_stack
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
 from .gossip import (gossip_shift, mix_matrix, mix_schedule,
-                     pushsum_gossip_shard, shard_map_fn, shift_schedule)
+                     pushsum_gossip_shard, shard_map_fn, shift_schedule,
+                     stale_mix_schedule, stale_mix_split)
 
-BACKENDS = ("loop", "vmap", "shard_map")
+BACKENDS = ("loop", "vmap", "shard_map", "async")
 MIXES = ("pushsum", "mean", "ring", "none")
 
 # round t's RNG key is fold_in(base_key, ROUND_KEY_OFFSET + t) — the
@@ -274,15 +318,17 @@ class FederationEngine:
         ``init(key) -> state`` per client.
     sample_fn : SampleFn
         ``sample(client_data, key) -> batch`` — draws one local batch.
-    backend : "auto" | "loop" | "vmap" | "shard_map"
+    backend : "auto" | "loop" | "vmap" | "shard_map" | "async"
     mix : "pushsum" | "mean" | "ring" | "none"
     mesh, axis : mesh + axis name for the shard_map backend.
+    staleness : gossip delay τ for the async backend (None -> the value in
+        ``cfg.staleness``); ignored by the synchronous backends.
     """
 
     def __init__(self, cfg: ProxyFLConfig, *, n_clients: int,
                  step_fns, init_fns, sample_fn: SampleFn,
                  backend: str = "auto", mix: str = "pushsum",
-                 mesh=None, axis: str = "clients"):
+                 mesh=None, axis: str = "clients", staleness=None):
         assert mix in MIXES, mix
         self.cfg = cfg
         self.K = n_clients
@@ -300,7 +346,7 @@ class FederationEngine:
         if backend == "auto":
             backend = "vmap" if homogeneous else "loop"
         assert backend in BACKENDS, backend
-        if backend in ("vmap", "shard_map"):
+        if backend in ("vmap", "shard_map", "async"):
             assert homogeneous, (
                 f"{backend} backend requires a homogeneous cohort; "
                 "heterogeneous private architectures need backend='loop'")
@@ -308,6 +354,23 @@ class FederationEngine:
             assert mesh is not None, "shard_map backend needs a mesh"
             assert dict(mesh.shape).get(axis) == n_clients, (
                 f"mesh axis {axis!r} must hold exactly {n_clients} devices")
+        if backend == "async":
+            self.staleness = int(cfg.staleness if staleness is None
+                                 else staleness)
+            assert self.staleness >= 0, self.staleness
+            if self.staleness and mix == "ring":
+                raise ValueError(
+                    "async staleness>0 is incompatible with the pure-"
+                    "permutation ring mix (CWT): clients keep no self mass, "
+                    "so a delayed delivery would leave them model-less for "
+                    "the first τ rounds; use staleness=0 or a mix with a "
+                    "positive diagonal (pushsum/mean)")
+        else:
+            self.staleness = 0
+        # staleness=0 is synchronous delivery: the async backend then runs
+        # the vmap round programs verbatim on UNWRAPPED state (no buffer),
+        # which is what makes τ=0 bit-identical to backend="vmap"
+        self._wrapped = backend == "async" and self.staleness > 0
         self.backend = backend
         # donation lets XLA update params/opt in place; CPU only warns
         self._donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -323,22 +386,45 @@ class FederationEngine:
 
     # -- state construction / access ---------------------------------------
 
+    def _clients_of(self, state):
+        """The stacked per-client state tree. For the stale async backend
+        (τ>0) the engine state is a federation-level wrapper ``{"clients":
+        <stacked tree>, "stale_theta": [τ, K, D], "stale_w": [τ, K]}`` —
+        the in-flight gossip buffer rides next to the clients, never inside
+        them (per-client step_fns must not see or drop it)."""
+        return state["clients"] if self._wrapped else state
+
     def init_states(self, key) -> Any:
-        """Per-client init at fold_in(key, k) — identical across backends."""
+        """Per-client init at fold_in(key, k) — identical across backends.
+        The stale async backend additionally allocates the empty τ-deep
+        in-flight buffer (cold start: nothing arrives for τ rounds and the
+        de-bias weights account for the mass in flight)."""
         states = [self.init_fns[k](jax.random.fold_in(key, k))
                   for k in range(self.K)]
-        return states if self.backend == "loop" else stack_states(states)
+        if self.backend == "loop":
+            return states
+        stacked = stack_states(states)
+        if not self._wrapped:
+            return stacked
+        flat0 = tree_flatten_vector(states[0]["proxy"]["params"])
+        return {"clients": stacked,
+                "stale_theta": jnp.zeros(
+                    (self.staleness, self.K, flat0.shape[0]), flat0.dtype),
+                "stale_w": jnp.zeros((self.staleness, self.K),
+                                     jnp.result_type(states[0]["w"]))}
 
     def export_states(self, state) -> List[Dict]:
         if self.backend == "loop":
             return list(state)
-        return [unstack_state(state, k) for k in range(self.K)]
+        clients = self._clients_of(state)
+        return [unstack_state(clients, k) for k in range(self.K)]
 
     def client_state(self, state, k: int) -> Dict:
-        return state[k] if self.backend == "loop" else unstack_state(state, k)
+        return (state[k] if self.backend == "loop"
+                else unstack_state(self._clients_of(state), k))
 
     def client_params(self, state, k: int, role: str = "proxy"):
-        s = state[k] if self.backend == "loop" else state
+        s = state[k] if self.backend == "loop" else self._clients_of(state)
         p = s[role]["params"]
         return p if self.backend == "loop" else jax.tree_util.tree_map(
             lambda x: x[k], p)
@@ -350,7 +436,7 @@ class FederationEngine:
         None when the per-client trees differ (heterogeneous architectures
         cannot be batched — callers fall back to per-client evaluation)."""
         if self.backend != "loop":
-            return state[role]["params"]
+            return self._clients_of(state)[role]["params"]
         trees = [s[role]["params"] for s in state]
         structs = {jax.tree_util.tree_structure(tr) for tr in trees}
         shapes = {tuple((x.shape, jnp.result_type(x))
@@ -377,13 +463,21 @@ class FederationEngine:
                    for k, s in enumerate(self.export_states(state))}
         steps = np.asarray([a.steps if a is not None else 0
                             for a in self.accountants], np.int32)
-        return {"clients": clients,
-                "rounds_done": np.asarray(t + 1, np.int32),
-                "accountant_steps": steps,
-                "base_key": _key_data(base_key),
-                # explicit flag: PRNGKey(0)'s key data is all zeros, so the
-                # key words alone cannot mean "no key recorded"
-                "base_key_set": np.asarray(base_key is not None, np.uint8)}
+        payload = {"clients": clients,
+                   "rounds_done": np.asarray(t + 1, np.int32),
+                   "accountant_steps": steps,
+                   "base_key": _key_data(base_key),
+                   # explicit flag: PRNGKey(0)'s key data is all zeros, so
+                   # the key words alone cannot mean "no key recorded"
+                   "base_key_set": np.asarray(base_key is not None, np.uint8)}
+        if self._wrapped:
+            # the in-flight gossip buffer is federation state: rounds
+            # t+1..t+τ deliver sends recorded here, so a resume without it
+            # could not replay the trajectory (a τ-mismatched or sync
+            # checkpoint fails the key/shape match with a descriptive error)
+            payload["stale_theta"] = state["stale_theta"]
+            payload["stale_w"] = state["stale_w"]
+        return payload
 
     def save_state(self, path: str, state, t: int, base_key=None) -> str:
         """Write a complete-federation snapshot after completed round ``t``
@@ -404,7 +498,14 @@ class FederationEngine:
             like = self.init_states(jax.random.PRNGKey(0))
         loaded = load_checkpoint(path, self._ckpt_payload(like, 0, None))
         clients = [loaded["clients"][f"c{k:04d}"] for k in range(self.K)]
-        state = clients if self.backend == "loop" else stack_states(clients)
+        if self.backend == "loop":
+            state: Any = clients
+        elif self._wrapped:
+            state = {"clients": stack_states(clients),
+                     "stale_theta": loaded["stale_theta"],
+                     "stale_w": loaded["stale_w"]}
+        else:
+            state = stack_states(clients)
         rounds_done = int(loaded["rounds_done"])
         steps = np.asarray(loaded["accountant_steps"])
         for k, acc in enumerate(self.accountants):
@@ -445,6 +546,8 @@ class FederationEngine:
             assert act.shape == (self.K,)
         if self.backend == "loop":
             state, metrics = self._round_loop(state, data, t, key, act)
+        elif self._wrapped:
+            state, metrics = self._round_stale(state, data, t, key, act)
         else:
             state, metrics = self._round_stacked(state, data, t, key, act)
         for k, acc in enumerate(self.accountants):
@@ -484,6 +587,12 @@ class FederationEngine:
         unrolled program every block, where per-round execution reuses one
         cached program per (shift, pattern).
 
+        The async backend at staleness>0 runs :meth:`_rounds_block_stale`
+        — the same outer scan with the τ-deep in-flight buffer in the
+        carry (rounds interleave INSIDE the block; dropout stays on the
+        blocked path since the stale splits are runtime arguments); at
+        staleness=0 it runs the vmap block verbatim.
+
         Returns ``(state, metrics)`` with each metric stacked to
         ``[n_rounds, K]`` (row i = round t0+i, NaN for inactive clients).
         """
@@ -495,9 +604,23 @@ class FederationEngine:
                 state, m = self.run_round(state, data, t, round_key(key, t))
                 rows.append(m)
             return state, _stack_metric_rows(rows, self.K)
-        return self._rounds_block(
-            state, data, t0, n_rounds, key,
-            active_schedule(t0, n_rounds, self.K, self.cfg))
+        block = self._rounds_block_stale if self._wrapped else \
+            self._rounds_block
+        return block(state, data, t0, n_rounds, key,
+                     active_schedule(t0, n_rounds, self.K, self.cfg))
+
+    def _finish_block(self, ms, act_stack, data):
+        """Shared block epilogue: pull the stacked [T, K] metrics to host
+        and bulk-step attached accountants over each client's ACTIVE
+        rounds. ONE definition for the sync and stale block paths, so the
+        DP step schedule cannot diverge between backends."""
+        metrics = {k: np.asarray(v) for k, v in ms.items()}
+        for k, acc in enumerate(self.accountants):
+            if acc is not None:
+                n_active_rounds = int(act_stack[:, k].sum())
+                if n_active_rounds:
+                    acc.step(n_active_rounds * self.n_steps(data[k]))
+        return metrics
 
     def _rounds_block(self, state, data, t0, T, key, act_sched):
         data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
@@ -506,7 +629,7 @@ class FederationEngine:
                      else act_sched)
         mixing = self.mix != "none" and self.K > 1
         Ps = jnp.zeros((T, 1))  # placeholder when no matmul mix runs
-        if self.backend == "vmap":
+        if self.backend != "shard_map":  # vmap, or async at staleness=0
             rkey = ("vmap_block", T, n_steps, step_masked, pass_nv)
             if rkey not in self._rounds:
                 matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,
@@ -536,13 +659,7 @@ class FederationEngine:
         state, ms = self._rounds[rkey](
             state, data_s, n_valid, steps_dev, Ps, jnp.asarray(act_stack),
             ts, key)
-        metrics = {k: np.asarray(v) for k, v in ms.items()}
-        for k, acc in enumerate(self.accountants):
-            if acc is not None:
-                n_active_rounds = int(act_stack[:, k].sum())
-                if n_active_rounds:
-                    acc.step(n_active_rounds * self.n_steps(data[k]))
-        return state, metrics
+        return state, self._finish_block(ms, act_stack, data)
 
     # -- loop backend --------------------------------------------------------
 
@@ -674,14 +791,14 @@ class FederationEngine:
             "none": (None, None),
         }[self.mix]
 
-    def _round_core(self, n_steps: int, mix_op, step_masked: bool = False,
-                    pass_n_valid: bool = True):
-        """One traceable program for the WHOLE round (``n_steps`` = the scan
-        length, i.e. the cohort-max step count). ``mix_op(flat, w, P) ->
-        (mixed, w2)`` is the only backend difference: a [K,K] matmul on the
-        stacked proxies (vmap — P is a runtime arg, so every round reuses
-        one compilation) or a ppermute collective (shard_map — the schedule
-        is baked in, P is unused). ``mix_op=None`` skips the exchange.
+    def _local_phase(self, n_steps: int, step_masked: bool = False,
+                     pass_n_valid: bool = True):
+        """``(stacked, data, n_valid, steps, act, key) -> (trained, last)``
+        — the local-update half of every stacked round program (``n_steps``
+        = the scan length, i.e. the cohort-max step count), shared VERBATIM
+        by the synchronous (vmap/shard_map) and stale (async) round cores
+        so their local trajectories — RNG chains, batch draws, DP noise —
+        are identical by construction; only the exchange differs.
 
         Raggedness is handled by two runtime arguments: ``n_valid`` bounds
         the sampler's index draw (padding is never sampled), and — only
@@ -709,7 +826,7 @@ class FederationEngine:
                 state, m = step_fn(state, batch, kn)
                 return state, key, m
 
-        def round_fn(stacked, data, n_valid, steps, P, act, key):
+        def local_fn(stacked, data, n_valid, steps, act, key):
             keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
                 jnp.arange(K, dtype=jnp.uint32))
 
@@ -731,6 +848,23 @@ class FederationEngine:
                 lambda x: x[idx, jnp.arange(K)], ms)
             last = {k: jnp.where(act, v, jnp.nan) for k, v in last.items()}
             trained = _tree_where(act, trained, stacked)  # dropouts keep state
+            return trained, last
+
+        return local_fn
+
+    def _round_core(self, n_steps: int, mix_op, step_masked: bool = False,
+                    pass_n_valid: bool = True):
+        """One traceable program for the WHOLE synchronous round: the
+        shared :meth:`_local_phase` followed by one graph exchange.
+        ``mix_op(flat, w, P) -> (mixed, w2)`` is the only backend
+        difference: a [K,K] matmul on the stacked proxies (vmap — P is a
+        runtime arg, so every round reuses one compilation) or a ppermute
+        collective (shard_map — the schedule is baked in, P is unused).
+        ``mix_op=None`` skips the exchange."""
+        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+
+        def round_fn(stacked, data, n_valid, steps, P, act, key):
+            trained, last = local(stacked, data, n_valid, steps, act, key)
             if mix_op is not None:
                 theta = trained["proxy"]["params"]
                 like = jax.tree_util.tree_map(lambda x: x[0], theta)
@@ -746,6 +880,130 @@ class FederationEngine:
             return trained, last
 
         return round_fn
+
+    def _stale_round_core(self, n_steps: int, mixing: bool,
+                          step_masked: bool = False,
+                          pass_n_valid: bool = True):
+        """One traceable program for a STALE (async, τ>0) round: the shared
+        :meth:`_local_phase`, then the delayed exchange of
+        ``repro.core.gossip.stale_gossip_reference`` — re-bias θ = z·w,
+        keep ``kept(t)``·θ, push ``sent(t) @ θ`` into the τ-deep in-flight
+        buffer, merge the round-(t−τ) delivery rotating out of it, and
+        de-bias by the identically-delayed weights. ``kept``/``sent`` are
+        runtime arguments (one compilation serves every round and every
+        membership pattern); the buffer rows travel with the state so the
+        same core replays bit-identically per-round, blocked, or across a
+        kill/resume. Inactive clients keep ``kept=1``/zero ``sent``
+        columns (they hold their mass and send nothing) but still merge
+        arriving mail — in-flight PushSum mass is never dropped."""
+        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+
+        def round_fn(stacked, buf_t, buf_w, data, n_valid, steps, kept,
+                     sent, act, key):
+            trained, last = local(stacked, data, n_valid, steps, act, key)
+            if mixing:
+                theta_tree = trained["proxy"]["params"]
+                like = jax.tree_util.tree_map(lambda x: x[0], theta_tree)
+                flat = jax.vmap(tree_flatten_vector)(theta_tree)   # [K, D]
+                w = jnp.asarray(trained["w"], flat.dtype)
+                theta = flat * w[:, None]              # raw PushSum numerator
+                send_t = sent.astype(flat.dtype) @ theta
+                send_w = sent.astype(w.dtype) @ w
+                mixed = kept.astype(flat.dtype)[:, None] * theta + buf_t[0]
+                w2 = kept.astype(w.dtype) * w + buf_w[0]
+                buf_t = jnp.concatenate([buf_t[1:], send_t[None]])
+                buf_w = jnp.concatenate([buf_w[1:], send_w[None]])
+                unb = mixed / w2[:, None]
+                theta2 = jax.vmap(
+                    lambda v: tree_unflatten_vector(v, like))(unb)
+                trained = dict(trained)
+                trained["proxy"] = dict(trained["proxy"], params=theta2)
+                trained["w"] = w2.astype(jnp.result_type(trained["w"]))
+            return trained, buf_t, buf_w, last
+
+        return round_fn
+
+    def _stale_split(self, t: int, act):
+        """Runtime (kept[K], sent[K,K]) arguments of one stale round."""
+        kept, sent = stale_mix_split(
+            mix_matrix(self.mix, t, self.K, self.cfg.topology, act))
+        return jnp.asarray(kept, jnp.float32), jnp.asarray(sent, jnp.float32)
+
+    def _round_stale(self, state, data, t, key, act):
+        data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
+            self._stacked_inputs(data)
+        act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
+        mixing = self.mix != "none" and self.K > 1
+        rkey = ("async", n_steps, step_masked, pass_nv, mixing)
+        if rkey not in self._rounds:
+            self._rounds[rkey] = jax.jit(
+                self._stale_round_core(n_steps, mixing, step_masked,
+                                       pass_nv),
+                donate_argnums=(0, 1, 2) if self._donate else ())
+        if mixing:
+            kept, sent = self._stale_split(t, act)
+        else:  # placeholders, never read
+            kept = jnp.zeros((self.K,), jnp.float32)
+            sent = jnp.zeros((self.K, self.K), jnp.float32)
+        clients, buf_t, buf_w, last = self._rounds[rkey](
+            state["clients"], state["stale_theta"], state["stale_w"],
+            data_s, n_valid, steps_dev, kept, sent, act_arr, key)
+        metrics = {k: np.asarray(v) for k, v in last.items()}
+        return {"clients": clients, "stale_theta": buf_t,
+                "stale_w": buf_w}, metrics
+
+    def _rounds_block_stale(self, state, data, t0, T, key, act_sched):
+        """Async round-block: ONE compiled outer ``lax.scan`` over rounds
+        whose carry holds the stacked client states AND the rotating
+        in-flight buffer — rounds genuinely interleave inside the block
+        (round t's local scan runs while its delivery, recorded τ rounds
+        earlier, is already in the carry), and the host sees only the
+        block edge. The per-round (kept, sent) splits arrive stacked as
+        runtime arguments (``stale_mix_schedule``), keys fold in-scan, so
+        any block size replays the per-round trajectory bit-exactly."""
+        data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
+            self._stacked_inputs(data)
+        act_stack = (np.ones((T, self.K), bool) if act_sched is None
+                     else act_sched)
+        mixing = self.mix != "none" and self.K > 1
+        rkey = ("async_block", T, n_steps, step_masked, pass_nv, mixing)
+        if rkey not in self._rounds:
+            core = self._stale_round_core(n_steps, mixing, step_masked,
+                                          pass_nv)
+
+            def block_fn(stacked, buf_t, buf_w, data, n_valid, steps,
+                         kepts, sents, acts, ts, base_key):
+                def body(carry, xs):
+                    st, bt, bw = carry
+                    kept, sent, a, t = xs
+                    st, bt, bw, last = core(st, bt, bw, data, n_valid,
+                                            steps, kept, sent, a,
+                                            round_key(base_key, t))
+                    return (st, bt, bw), last
+
+                (st, bt, bw), ms = jax.lax.scan(
+                    body, (stacked, buf_t, buf_w),
+                    (kepts, sents, acts, ts))
+                return st, bt, bw, ms
+
+            self._rounds[rkey] = jax.jit(
+                block_fn, donate_argnums=(0, 1, 2) if self._donate else ())
+        if mixing:
+            kepts, sents = stale_mix_schedule(
+                self.mix, t0, T, self.K, self.cfg.topology,
+                active=act_sched)
+            kepts = jnp.asarray(kepts, jnp.float32)
+            sents = jnp.asarray(sents, jnp.float32)
+        else:
+            kepts = jnp.zeros((T, self.K), jnp.float32)
+            sents = jnp.zeros((T, self.K, self.K), jnp.float32)
+        ts = jnp.arange(t0, t0 + T, dtype=jnp.int32)
+        clients, buf_t, buf_w, ms = self._rounds[rkey](
+            state["clients"], state["stale_theta"], state["stale_w"],
+            data_s, n_valid, steps_dev, kepts, sents,
+            jnp.asarray(act_stack), ts, key)
+        return {"clients": clients, "stale_theta": buf_t,
+                "stale_w": buf_w}, self._finish_block(ms, act_stack, data)
 
     def _build_round(self, n_steps: int, mix_op, step_masked: bool = False,
                      pass_n_valid: bool = True):
@@ -842,7 +1100,7 @@ class FederationEngine:
         act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
         mixing = self.mix != "none" and self.K > 1
         P = jnp.zeros((0,))  # placeholder when no matmul mix runs
-        if self.backend == "vmap":
+        if self.backend != "shard_map":  # vmap, or async at staleness=0
             rkey = ("vmap", n_steps, step_masked, pass_nv)
             if rkey not in self._rounds:
                 matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,

@@ -232,6 +232,96 @@ def mix_schedule(mix: str, t0: int, T: int, n_clients: int,
 
 
 # ---------------------------------------------------------------------------
+# stale gossip: the async backend's diag/off-diag split of P^(t)
+#
+# The synchronous exchange applies the whole column-stochastic P^(t) at
+# once. The staleness-τ variant (Assran et al. 2019's overlap trick) splits
+# every column into the mass a client KEEPS (the diagonal) and the mass it
+# SENDS (the off-diagonal rest): sends computed at round t stay in flight —
+# communication overlapped with the next local scans — and are delivered at
+# round t+τ. Crucially the split operates on the RAW PushSum numerators
+# θ = z·w (not the de-biased z): the de-bias weights w then account for the
+# in-flight mass exactly, so θ/w stays a proper weighted average of client
+# parameters at every staleness, and total θ- and w-mass (clients + buffer)
+# is conserved round by round (column-stochasticity is preserved by the
+# split: kept_k + Σ_j sent_{jk} = Σ_j P_{jk} = 1).
+
+
+def stale_mix_split(P):
+    """Diag/off-diag split of column-stochastic matrices (batched over any
+    leading dims): returns ``(kept[..., K], sent[..., K, K])`` with
+    ``P == sent + diag_embed(kept)`` exactly — ``kept[k]`` is the mass
+    client k retains this round, column ``sent[:, k]`` the mass it puts in
+    flight."""
+    P = np.asarray(P)
+    K = P.shape[-1]
+    idx = np.arange(K)
+    kept = P[..., idx, idx].copy()
+    sent = P.copy()
+    sent[..., idx, idx] = 0.0
+    return kept, sent
+
+
+def stale_mix_schedule(mix: str, t0: int, T: int, n_clients: int,
+                       topology: str = "exponential", active=None,
+                       self_weight: float = 0.5):
+    """Stacked stale-mix split for one round-block: ``(kept[T, K],
+    sent[T, K, K])`` with ``sent[i] + diag(kept[i]) == mix_matrix(mix,
+    t0 + i, ...)`` exactly (same mix -> graph mapping, ``active`` is None
+    or bool[T, K]). The host-side half of the async backend's fused
+    round-block execution."""
+    return stale_mix_split(mix_schedule(mix, t0, T, n_clients, topology,
+                                        active=active,
+                                        self_weight=self_weight))
+
+
+def stale_gossip_reference(z0, w0, Ps, staleness: int):
+    """Numpy reference of the staleness-τ PushSum exchange — the executable
+    spec the async engine backend and its property tests are held to.
+
+    ``z0``: [K, D] de-biased client vectors; ``w0``: [K] de-bias weights;
+    ``Ps``: iterable of [K, K] column-stochastic matrices (one per round,
+    §3.4 active masking already applied). Per round t:
+
+    1. re-bias:  θ(t) = z(t) · w(t)  (raw PushSum numerators);
+    2. send:     ``sent(t) @ θ(t)`` and ``sent(t) @ w(t)`` enter a τ-deep
+       in-flight buffer (delivered at round t+τ; the buffer starts empty —
+       for the first τ rounds nothing arrives and the de-bias weights
+       shrink to account for the mass in flight);
+    3. deliver:  the round-(t−τ) sends leave the buffer and merge into
+       ``mixed = kept(t)·θ(t) + recv`` and ``w' = kept(t)·w(t) + recv_w``;
+    4. de-bias:  z(t+1) = mixed / w'.
+
+    τ=0 degenerates to the synchronous exchange ``P @ θ`` / ``P @ w``.
+    Returns ``(z, w, buf_theta[τ, K, D], buf_w[τ, K])`` after ``len(Ps)``
+    rounds; buffer row 0 is the next delivery. Invariants (property-tested
+    in tests/test_gossip.py): Σ w + Σ buf_w == Σ w0 and
+    Σ z·w + Σ buf_theta == Σ z0·w0 after every round, for ANY τ and any
+    §3.4 dropout trajectory; a send entered at round t leaves the buffer
+    at exactly round t+τ."""
+    z = np.asarray(z0, np.float64)
+    w = np.asarray(w0, np.float64)
+    K, D = z.shape
+    tau = int(staleness)
+    buf_t = np.zeros((tau, K, D))
+    buf_w = np.zeros((tau, K))
+    for P in Ps:
+        kept, sent = stale_mix_split(np.asarray(P, np.float64))
+        theta = z * w[:, None]
+        if tau == 0:
+            mixed = (sent + np.diag(kept)) @ theta
+            w = (sent + np.diag(kept)) @ w
+        else:
+            send_t, send_w = sent @ theta, sent @ w
+            mixed = kept[:, None] * theta + buf_t[0]
+            w = kept * w + buf_w[0]
+            buf_t = np.concatenate([buf_t[1:], send_t[None]])
+            buf_w = np.concatenate([buf_w[1:], send_w[None]])
+        z = mixed / w[:, None]
+    return z, w, buf_t, buf_w
+
+
+# ---------------------------------------------------------------------------
 # distributed backend: one client per mesh-axis index, ppermute exchange
 
 

@@ -15,9 +15,12 @@ scan over rounds, stacked ``mix_schedule`` exchange matrices, in-scan RNG
 folding) so the host syncs only at block edges — bit-identical to
 per-round execution, with checkpoints landing on block edges.
 ``--backend loop`` keeps the per-client dispatch (useful for debugging /
-heterogeneous experiments). ``--dropout-rate`` exercises the §3.4
-dropout/join scenario: clients sit rounds out and the time-varying gossip
-graph re-knits around them.
+heterogeneous experiments). ``--backend async --staleness T`` switches to
+the stale-gossip exchange: the round-t mix merges neighbor proxy mass put
+in flight τ rounds earlier (communication overlapped with the local
+scans, Assran et al. 2019; τ=0 is bit-identical to vmap). ``--dropout-rate``
+exercises the §3.4 dropout/join scenario: clients sit rounds out and the
+time-varying gossip graph re-knits around them.
 
 On CPU this runs the reduced (smoke) variant of the chosen architecture;
 the full-size configs are exercised through ``dryrun.py``. The default
@@ -108,10 +111,17 @@ def main(argv=None) -> int:
     ap.add_argument("--clip", type=float, default=1.0)
     ap.add_argument("--topology", default="exponential",
                     choices=("exponential", "ring", "full"))
-    ap.add_argument("--backend", default="vmap", choices=("loop", "vmap"),
+    ap.add_argument("--backend", default="vmap",
+                    choices=("loop", "vmap", "async"),
                     help="federation engine backend (vmap = one compiled "
-                         "round program; shard_map needs a multi-device "
+                         "round program; async = staleness-τ stale gossip, "
+                         "see --staleness; shard_map needs a multi-device "
                          "mesh, see dryrun.py)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="gossip delay τ for --backend async: the round-t "
+                         "exchange merges neighbor proxy mass sent τ rounds "
+                         "earlier (communication overlapped with the local "
+                         "scans); 0 is bit-identical to the vmap backend")
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client dropout probability (§3.4)")
     ap.add_argument("--rounds-per-block", type=int, default=1,
@@ -143,9 +153,12 @@ def main(argv=None) -> int:
         alpha=args.alpha, beta=args.alpha, n_clients=K, rounds=args.rounds,
         local_steps=args.steps_per_round, lr=args.lr, batch_size=args.batch,
         topology=args.topology, seed=args.seed,
-        dropout_rate=args.dropout_rate,
+        dropout_rate=args.dropout_rate, staleness=args.staleness,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,
                     noise_multiplier=args.sigma))
+    if args.staleness and args.backend != "async":
+        raise SystemExit("--staleness requires --backend async "
+                         "(the synchronous backends deliver every round)")
     opts = StepOptions(remat=False, accum=1, dp_chunk=args.batch)
 
     key = jax.random.PRNGKey(args.seed)

@@ -1,9 +1,10 @@
-"""Round-block execution (``FederationEngine.run_rounds``): blocked runs
-must be BIT-IDENTICAL to the historical per-round loop — same final proxy
-and private parameters, same epsilon — for every method and backend, for
-any block size, including dropout (§3.4) and DP noise; checkpoint cadence
-must land on block edges; and the batched cohort evaluation must agree
-with the per-client one."""
+"""Round-block execution (``FederationEngine.run_rounds``) engine-level
+semantics: stacked [T, K] metric trajectories, block-edge bulk accountant
+stepping, checkpoint cadences cut to block edges, the shard_map block, and
+batched-vs-sequential cohort evaluation. The end-to-end blocked ==
+per-round BIT-IDENTITY assertions (every method × backend × block size,
+dropout and DP included) live in the table-driven matrix of
+tests/test_conformance.py."""
 import dataclasses
 import os
 
@@ -12,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import DPConfig, ProxyFLConfig
-from repro.core.baselines import METHODS, run_federated
+from repro.core.baselines import run_federated
 from repro.core.engine import dml_engine, round_key, single_model_engine
 from repro.core.protocol import ModelSpec, evaluate, evaluate_batched
 from repro.data.synthetic import make_classification_data
@@ -44,70 +45,6 @@ def _final_flats(res):
                 np.asarray(tree_flatten_vector(getattr(c, role)))
                 for c in res["clients"]])
     return out
-
-
-# ---------------------------------------------------------------------------
-# end-to-end bit-identity: rounds_per_block in {1, 2, rounds}
-
-
-@pytest.mark.fast
-@pytest.mark.parametrize("backend", ("loop", "vmap"))
-def test_blocked_run_federated_bit_identical_dml(fed_data, mlp_spec, backend):
-    """ProxyFL with DP noise AND a §3.4 dropout schedule: block sizes 1, 2
-    and the whole horizon produce the same bits as the per-round loop —
-    params and epsilon. This is the acceptance bar for the fused round
-    boundary: blocks may only remove host synchronization, never change
-    the trajectory."""
-    cfg = ProxyFLConfig(n_clients=K, rounds=4, batch_size=50, local_steps=2,
-                        dropout_rate=0.25,
-                        dp=DPConfig(enabled=True, noise_multiplier=1.0,
-                                    clip_norm=1.0))
-    run = lambda B: run_federated(
-        "proxyfl", [mlp_spec] * K, mlp_spec, fed_data, fed_data[0], cfg,
-        seed=0, eval_every=cfg.rounds, backend=backend, rounds_per_block=B)
-    ref = run(1)
-    ref_flat = _final_flats(ref)
-    for B in (2, cfg.rounds):
-        got = run(B)
-        for role, v in _final_flats(got).items():
-            np.testing.assert_array_equal(
-                ref_flat[role], v,
-                err_msg=f"{backend} B={B} {role} not bit-identical")
-        assert got["epsilon"] == ref["epsilon"], f"{backend} B={B}"
-        assert [r["round"] for r in got["history"]] == \
-            [r["round"] for r in ref["history"]]
-
-
-@pytest.mark.fast
-@pytest.mark.parametrize("method", ("fedavg", "avgpush", "cwt", "regular"))
-def test_blocked_run_federated_bit_identical_single(fed_data, mlp_spec,
-                                                    method):
-    cfg = ProxyFLConfig(n_clients=K, rounds=3, batch_size=50, local_steps=1,
-                        dp=DPConfig(enabled=False))
-    run = lambda B: run_federated(
-        method, [mlp_spec] * K, mlp_spec, fed_data, fed_data[0], cfg,
-        seed=0, eval_every=cfg.rounds, backend="vmap", rounds_per_block=B)
-    ref = _final_flats(run(1))
-    for B in (2, cfg.rounds):
-        for role, v in _final_flats(run(B)).items():
-            np.testing.assert_array_equal(ref[role], v,
-                                          err_msg=f"{method} B={B}")
-
-
-def test_blocked_run_federated_bit_identical_all_methods(fed_data, mlp_spec):
-    """Every METHODS-table entry (joint included — its pooled single-client
-    cohort also rides the block path) agrees bitwise between per-round and
-    whole-horizon blocks on the default backend."""
-    for method in METHODS:
-        cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50,
-                            local_steps=1, dp=DPConfig(enabled=False))
-        run = lambda B: run_federated(
-            method, [mlp_spec] * K, mlp_spec, fed_data, fed_data[0], cfg,
-            seed=0, eval_every=cfg.rounds, rounds_per_block=B)
-        ref = _final_flats(run(1))
-        for role, v in _final_flats(run(cfg.rounds)).items():
-            np.testing.assert_array_equal(ref[role], v,
-                                          err_msg=f"{method}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,15 @@
-"""FederationEngine: backend equivalence (loop == vmap on a homogeneous
-cohort), §3.4 dropout/join semantics (inactive clients frozen, PushSum mass
-conserved under time-varying membership), and the unified mixing matrices
-behind every METHODS-table aggregation rule."""
+"""FederationEngine semantics: §3.4 dropout/join (inactive clients frozen,
+PushSum mass conserved under time-varying membership), the unified mixing
+matrices behind every METHODS-table aggregation rule, checkpoint round-
+trips, and backend construction rules. Cross-backend EQUIVALENCE (loop ==
+vmap == async-τ0, blocked == per-round, ...) lives in the table-driven
+matrix of tests/test_conformance.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import DPConfig, ProxyFLConfig
-from repro.core.baselines import run_federated
 from repro.core.engine import (FederationEngine, active_mask, dml_engine,
                                single_model_engine)
 from repro.core.gossip import mix_matrix, pushsum_mix
@@ -47,69 +48,6 @@ def _flat_private(states):
                          for s in states])
     return np.asarray(
         jax.vmap(tree_flatten_vector)(states["private"]["params"]))
-
-
-# ---------------------------------------------------------------------------
-# backend equivalence
-
-
-@pytest.mark.fast
-def test_loop_vmap_backends_match(fed_data, mlp_spec):
-    """A vmap-backend round on a homogeneous 4-client cohort must reproduce
-    the loop backend within numerical tolerance — same key schedule, same
-    batches, same DP noise, only the execution strategy differs."""
-    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=3,
-                        dp=DPConfig(enabled=True))
-    key = jax.random.PRNGKey(0)
-    results = {}
-    for backend in ("loop", "vmap"):
-        eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend=backend)
-        state = eng.init_states(key)
-        for t in range(cfg.rounds):
-            state, metrics = eng.run_round(
-                state, fed_data, t, jax.random.fold_in(key, 10_000 + t))
-        results[backend] = (_flat_private(state), _flat_clients(state), metrics)
-    np.testing.assert_allclose(results["loop"][0], results["vmap"][0],
-                               atol=1e-5, rtol=1e-4)
-    np.testing.assert_allclose(results["loop"][1], results["vmap"][1],
-                               atol=1e-5, rtol=1e-4)
-    for k in results["loop"][2]:
-        np.testing.assert_allclose(results["loop"][2][k],
-                                   results["vmap"][2][k], atol=1e-4, rtol=1e-3)
-
-
-def test_run_federated_backend_equivalence(fed_data, mlp_spec):
-    """End-to-end: run_federated produces matching final client states on
-    both backends (accuracy history equal up to eval batching)."""
-    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=2,
-                        dp=DPConfig(enabled=True))
-    xt, yt = fed_data[0]
-    out = {}
-    for backend in ("loop", "vmap"):
-        res = run_federated("proxyfl", [mlp_spec] * K, mlp_spec, fed_data,
-                            (xt, yt), cfg, backend=backend)
-        out[backend] = np.stack([
-            np.asarray(tree_flatten_vector(c.proxy_params))
-            for c in res["clients"]])
-    np.testing.assert_allclose(out["loop"], out["vmap"], atol=1e-5, rtol=1e-4)
-
-
-@pytest.mark.fast
-def test_single_model_mixes_match_loop(fed_data, mlp_spec):
-    """fedavg/avgpush/cwt/regular single-model rounds agree across backends."""
-    xt, yt = fed_data[0]
-    for method in ("fedavg", "avgpush", "cwt", "regular"):
-        cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50,
-                            local_steps=2, dp=DPConfig(enabled=False))
-        outs = []
-        for backend in ("loop", "vmap"):
-            res = run_federated(method, [mlp_spec] * K, mlp_spec, fed_data,
-                                (xt, yt), cfg, backend=backend)
-            outs.append(np.stack([
-                np.asarray(tree_flatten_vector(c.params))
-                for c in res["clients"]]))
-        np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, rtol=1e-4,
-                                   err_msg=method)
 
 
 # ---------------------------------------------------------------------------

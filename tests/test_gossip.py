@@ -10,7 +10,9 @@ from _hypothesis_compat import given, st
 from repro.core.gossip import (adjacency_matrix, adjacency_schedule,
                                comm_cost_per_round, debias,
                                exponential_offsets, gossip_shift, mix_matrix,
-                               mix_schedule, pushsum_mix, shift_schedule)
+                               mix_schedule, pushsum_mix, shift_schedule,
+                               stale_gossip_reference, stale_mix_schedule,
+                               stale_mix_split)
 
 pytestmark = pytest.mark.fast  # host-side graph algebra, no model compiles
 
@@ -141,6 +143,195 @@ def test_shift_schedule_matches_gossip_shift():
             assert s.shape == (10,)
             for i in range(10):
                 assert s[i] == gossip_shift(3 + i, A, topology)
+
+
+# ---------------------------------------------------------------------------
+# stale gossip (async backend): diag/off-diag split + delayed-delivery
+# invariants. Each property test has a pinned deterministic twin so the
+# invariants are exercised even where hypothesis is unavailable.
+
+
+def _random_active(rng, T, K, p=0.7):
+    active = rng.random((T, K)) < p
+    active[~active.any(axis=1), 0] = True  # every round keeps >= 1 client
+    return active
+
+
+def _slow_stale(z0, w0, Ps, tau):
+    """Independent message-queue implementation of staleness-τ PushSum:
+    every (send_round -> delivery_round) message is an explicit queue
+    entry, delivered when its time comes. The vectorized
+    ``stale_gossip_reference`` (and through it the engine's async backend)
+    must agree — this is the buffer-rotation-correctness oracle."""
+    z = np.asarray(z0, np.float64).copy()
+    w = np.asarray(w0, np.float64).copy()
+    queue = []  # (delivery_round, recv_theta[K, D], recv_w[K])
+    for t, P in enumerate(Ps):
+        P = np.asarray(P, np.float64)
+        kept = np.diag(P).copy()
+        sent = P - np.diag(kept)
+        theta = z * w[:, None]
+        if tau == 0:
+            mixed, w = P @ theta, P @ w
+        else:
+            queue.append((t + tau, sent @ theta, sent @ w))
+            r_t = np.zeros_like(theta)
+            r_w = np.zeros_like(w)
+            for due, qt, qw in queue:
+                if due == t:
+                    r_t, r_w = qt, qw
+            queue = [m for m in queue if m[0] > t]
+            mixed = kept[:, None] * theta + r_t
+            w = kept * w + r_w
+        z = mixed / w[:, None]
+    return z, w, queue
+
+
+def _check_split(mix, topology, t0, T, K, active):
+    for act in (None, active):
+        kept, sent = stale_mix_schedule(mix, t0, T, K, topology, active=act)
+        S = mix_schedule(mix, t0, T, K, topology, active=act)
+        assert kept.shape == (T, K) and sent.shape == (T, K, K)
+        assert (kept >= 0).all() and (sent >= 0).all()
+        idx = np.arange(K)
+        np.testing.assert_array_equal(sent[:, idx, idx], 0.0)
+        # split + diagonal reassembles P EXACTLY, and column-stochasticity
+        # survives the split: kept_k + sum_j sent_jk == 1 every round
+        recon = sent.copy()
+        recon[:, idx, idx] = kept
+        np.testing.assert_array_equal(recon, S)
+        np.testing.assert_allclose(kept + sent.sum(axis=1), 1.0, atol=1e-12)
+
+
+@given(st.integers(0, 40), st.integers(1, 10), st.integers(1, 17),
+       st.sampled_from(["exponential", "ring", "full"]),
+       st.sampled_from(["pushsum", "mean", "ring", "none"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_stale_split_column_stochastic_and_exact(t0, T, K, topology, mix,
+                                                 mask_seed):
+    active = _random_active(np.random.default_rng(mask_seed), T, K)
+    _check_split(mix, topology, t0, T, K, active)
+
+
+def test_stale_split_column_stochastic_and_exact_deterministic():
+    rng = np.random.default_rng(11)
+    for mix in ("pushsum", "mean", "ring", "none"):
+        for K, t0, T in ((1, 0, 3), (2, 5, 4), (8, 2, 7), (16, 31, 5)):
+            _check_split(mix, "exponential", t0, T, K,
+                         _random_active(rng, T, K))
+
+
+def _check_mass_conservation(K, D, T, tau, mix, seed, active):
+    rng = np.random.default_rng(seed)
+    z0 = rng.normal(size=(K, D))
+    w0 = np.ones(K)
+    Ps = [mix_matrix(mix, t, K, "exponential",
+                     None if active is None else active[t])
+          for t in range(T)]
+    theta0, wm0 = (z0 * w0[:, None]).sum(), w0.sum()
+    for cut in range(1, T + 1):  # invariant holds after EVERY round
+        z, w, buf_t, buf_w = stale_gossip_reference(z0, w0, Ps[:cut], tau)
+        np.testing.assert_allclose(
+            (z * w[:, None]).sum() + buf_t.sum(), theta0, rtol=1e-9,
+            err_msg=f"theta mass lost at round {cut} (tau={tau})")
+        np.testing.assert_allclose(
+            w.sum() + buf_w.sum(), wm0, rtol=1e-12,
+            err_msg=f"w mass lost at round {cut} (tau={tau})")
+        assert (w > 0).all()  # de-bias weights stay valid under delay
+
+
+@given(st.integers(2, 9), st.integers(1, 8), st.integers(0, 4),
+       st.sampled_from(["pushsum", "mean"]), st.integers(0, 2 ** 31 - 1),
+       st.booleans())
+def test_stale_gossip_mass_conserved(K, T, tau, mix, seed, dropout):
+    """Total raw PushSum mass Σ z·w and total de-bias weight Σ w — clients
+    PLUS the in-flight buffer — are conserved after every round, for any
+    staleness and any §3.4 dropout trajectory. (ring is excluded: a zero
+    diagonal plus delay leaves clients model-less, which the engine
+    rejects at construction.)"""
+    active = (_random_active(np.random.default_rng(seed + 1), T, K)
+              if dropout else None)
+    _check_mass_conservation(K, 3, T, tau, mix, seed, active)
+
+
+def test_stale_gossip_mass_conserved_deterministic():
+    rng = np.random.default_rng(5)
+    for K, T, tau, mix in ((2, 4, 0, "pushsum"), (5, 6, 1, "pushsum"),
+                           (8, 5, 2, "mean"), (3, 8, 4, "pushsum")):
+        _check_mass_conservation(K, 3, T, tau, mix, int(rng.integers(1e6)),
+                                 _random_active(rng, T, K))
+
+
+def _check_rotation(K, T, tau, seed, active):
+    rng = np.random.default_rng(seed)
+    z0 = rng.normal(size=(K, 3))
+    w0 = np.ones(K)
+    Ps = [mix_matrix("pushsum", t, K, "exponential",
+                     None if active is None else active[t])
+          for t in range(T)]
+    z, w, buf_t, buf_w = stale_gossip_reference(z0, w0, Ps, tau)
+    sz, sw, queue = _slow_stale(z0, w0, Ps, tau)
+    np.testing.assert_allclose(z, sz, rtol=1e-9)
+    np.testing.assert_allclose(w, sw, rtol=1e-12)
+    # the rotating buffer holds exactly the queue's undelivered messages,
+    # oldest (next delivery) first
+    assert buf_t.shape == (tau, K, 3) and len(queue) == min(tau, T)
+    for i, (due, qt, qw) in enumerate(sorted(queue)):
+        row = tau - len(queue) + i  # cold-start zeros precede real sends
+        np.testing.assert_allclose(buf_t[row], qt, rtol=1e-12)
+        np.testing.assert_allclose(buf_w[row], qw, rtol=1e-12)
+
+
+@given(st.integers(2, 9), st.integers(1, 8), st.integers(0, 4),
+       st.integers(0, 2 ** 31 - 1), st.booleans())
+def test_stale_buffer_rotation_matches_message_queue(K, T, tau, seed,
+                                                     dropout):
+    """The τ-deep rotating buffer must behave exactly like an explicit
+    per-message delivery queue (send at t, deliver at t+τ) — the
+    independent oracle for buffer rotation correctness."""
+    active = (_random_active(np.random.default_rng(seed + 1), T, K)
+              if dropout else None)
+    _check_rotation(K, T, tau, seed, active)
+
+
+def test_stale_buffer_rotation_matches_message_queue_deterministic():
+    rng = np.random.default_rng(17)
+    for K, T, tau in ((2, 3, 1), (4, 6, 2), (5, 2, 4), (8, 8, 3)):
+        _check_rotation(K, T, tau, int(rng.integers(1e6)),
+                        _random_active(rng, T, K))
+
+
+def test_stale_reference_tau0_equals_sync():
+    """τ=0 (immediate delivery) must reproduce the synchronous PushSum
+    trajectory — the host-side twin of the engine's async-τ0 == vmap
+    bit-identity."""
+    K, D, T = 6, 4, 7
+    rng = np.random.default_rng(3)
+    z = rng.normal(size=(K, D))
+    w = np.ones(K)
+    Ps = [mix_matrix("pushsum", t, K, "exponential") for t in range(T)]
+    ref_z, ref_w = z.copy(), w.copy()
+    for P in Ps:
+        theta = ref_z * ref_w[:, None]
+        mixed, ref_w = pushsum_mix(jnp.asarray(theta), jnp.asarray(ref_w), P)
+        ref_w = np.asarray(ref_w)
+        ref_z = np.asarray(mixed) / ref_w[:, None]
+    got_z, got_w, buf_t, buf_w = stale_gossip_reference(z, w, Ps, 0)
+    np.testing.assert_allclose(got_z, ref_z, rtol=1e-6)
+    np.testing.assert_allclose(got_w, ref_w, rtol=1e-6)
+    assert buf_t.shape == (0, K, D) and buf_w.shape == (0, K)
+
+
+def test_stale_consensus_is_fixed_point():
+    """If every client already holds the consensus vector, staleness must
+    not perturb it: mixing RAW numerators θ = z·w (not the de-biased z)
+    is what makes delivered mass arrive with its matching weight."""
+    K, T, tau = 5, 10, 2
+    c = np.array([1.5, -2.0, 0.25])
+    z = np.tile(c, (K, 1))
+    Ps = [mix_matrix("pushsum", t, K, "exponential") for t in range(T)]
+    got_z, got_w, _, _ = stale_gossip_reference(z, np.ones(K), Ps, tau)
+    np.testing.assert_allclose(got_z, z, rtol=1e-12)
 
 
 def test_comm_cost_scaling():

@@ -1,8 +1,10 @@
 """Ragged (size-skewed) cohorts on the compiled stacked path: padded
-stacking semantics, masked sampling (padding never drawn), per-client step
-masks, loop==vmap equivalence on a Dirichlet cohort, padded-checkpoint
-bit-identity, the keyed stacked-data LRU, and the honest ``auto`` backend
-selector. Partition property tests (disjointness, bounds) ride along."""
+stacking semantics, masked sampling (padding never drawn), padded-
+checkpoint bit-identity, the keyed stacked-data LRU, and the honest
+``auto`` backend selector. The loop==vmap(==async-τ0) equivalence on
+Dirichlet cohorts lives in the table-driven matrix of
+tests/test_conformance.py. Partition property tests (disjointness,
+bounds) ride along."""
 import os
 
 import jax
@@ -14,7 +16,7 @@ from _hypothesis_compat import given, st
 
 import repro.core.engine as engine_mod
 from repro.configs.base import DPConfig, ProxyFLConfig
-from repro.core.baselines import _resolve_backend, run_federated
+from repro.core.baselines import _resolve_backend
 from repro.core.engine import classifier_sampler, dml_engine
 from repro.core.protocol import ModelSpec
 from repro.data.partition import partition_dirichlet, partition_major
@@ -134,58 +136,6 @@ def test_engine_round_never_touches_padding(ragged_data, mlp_spec,
 
 
 # ---------------------------------------------------------------------------
-# loop == vmap on a ragged Dirichlet cohort (also the CI ragged smoke)
-
-
-@pytest.mark.fast
-def test_ragged_dirichlet_loop_vmap_equivalence(ragged_data, mlp_spec):
-    """Epoch mode (local_steps=0) makes per-client step counts differ, so
-    this exercises padding, masked sampling AND the per-client step mask;
-    final private+proxy params and metrics must match the loop backend."""
-    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=0,
-                        dp=DPConfig(enabled=True))
-    key = jax.random.PRNGKey(0)
-    results = {}
-    for backend in ("loop", "vmap"):
-        eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend=backend)
-        state = eng.init_states(key)
-        for t in range(cfg.rounds):
-            state, metrics = eng.run_round(
-                state, ragged_data, t, jax.random.fold_in(key, 10_000 + t))
-        results[backend] = (_flat(eng, state, "private"),
-                            _flat(eng, state, "proxy"), metrics)
-    np.testing.assert_allclose(results["loop"][0], results["vmap"][0],
-                               atol=1e-5, rtol=1e-4)
-    np.testing.assert_allclose(results["loop"][1], results["vmap"][1],
-                               atol=1e-5, rtol=1e-4)
-    for k in results["loop"][2]:
-        np.testing.assert_allclose(results["loop"][2][k],
-                                   results["vmap"][2][k], atol=1e-4, rtol=1e-3)
-
-
-@pytest.mark.fast
-def test_ragged_step_mask_composes_with_active_mask(ragged_data, mlp_spec):
-    """§3.4 dropout on a ragged cohort: the per-step exhaustion mask and
-    the active mask compose — loop and vmap still agree."""
-    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=0,
-                        dp=DPConfig(enabled=False))
-    key = jax.random.PRNGKey(1)
-    masks = [np.array([True, False, True, True]),
-             np.array([False, True, True, False])]
-    finals = {}
-    for backend in ("loop", "vmap"):
-        eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend=backend)
-        state = eng.init_states(key)
-        for t, act in enumerate(masks):
-            state, _ = eng.run_round(
-                state, ragged_data, t, jax.random.fold_in(key, 10_000 + t),
-                active=act)
-        finals[backend] = _flat(eng, state, "proxy")
-    np.testing.assert_allclose(finals["loop"], finals["vmap"],
-                               atol=1e-5, rtol=1e-4)
-
-
-# ---------------------------------------------------------------------------
 # padded-state checkpointing
 
 
@@ -239,7 +189,7 @@ def test_stack_cache_keyed_lru_no_thrash(ragged_data, mlp_spec):
 
 
 # ---------------------------------------------------------------------------
-# honest auto selector + end-to-end run_federated
+# honest auto selector
 
 
 @pytest.mark.fast
@@ -254,21 +204,17 @@ def test_auto_keeps_ragged_on_stacked_path(ragged_data):
     assert _resolve_backend("vmap", cfg, bad) == "vmap"  # explicit wins
 
 
-def test_run_federated_auto_on_ragged_dirichlet(ragged_data, mlp_spec):
-    """The acceptance scenario: a Dirichlet-partitioned size-skewed cohort
-    under backend='auto' runs the vmap path end-to-end (no ValueError) and
-    matches the loop backend's final per-client parameters."""
-    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50, local_steps=0,
-                        dp=DPConfig(enabled=False))
-    xt, yt = ragged_data[1]
-    out = {}
-    for backend in ("auto", "loop"):
-        res = run_federated("proxyfl", [mlp_spec] * K, mlp_spec, ragged_data,
-                            (xt, yt), cfg, backend=backend)
-        out[backend] = np.stack([
-            np.asarray(tree_flatten_vector(c.proxy_params))
-            for c in res["clients"]])
-    np.testing.assert_allclose(out["auto"], out["loop"], atol=1e-5, rtol=1e-4)
+@pytest.mark.fast
+def test_async_backend_rejects_incompatible_trees(ragged_data):
+    """backend='async' has no loop fallback — a silent switch to the
+    synchronous loop would change the protocol's delivery semantics."""
+    cfg = ProxyFLConfig(n_clients=K, staleness=2)
+    assert _resolve_backend("async", cfg, ragged_data) == "async"
+    bad = list(ragged_data)
+    x, y = bad[0]
+    bad[0] = (x[:, :7], y)
+    with pytest.raises(ValueError, match="async"):
+        _resolve_backend("async", cfg, bad)
 
 
 def test_stacked_backend_rejects_unmasked_sampler_on_ragged(ragged_data,
