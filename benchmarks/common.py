@@ -127,7 +127,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   backend: str = None, dropout_rate: float = 0.0,
                   rounds_per_block: int = 0, staleness: int = 0,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
-                  resume: bool = None
+                  resume: bool = None, use_pallas: bool = None
                   ) -> List[Dict]:
     """``backend`` selects the FederationEngine execution path for every
     figure run ("auto" -> one compiled vmap round program on these
@@ -146,7 +146,9 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     benchmark restarts mid-run and finishes bit-identically to an
     uninterrupted one. Env overrides (for figure drivers run as scripts):
     ``REPRO_BENCH_CKPT_DIR``, ``REPRO_BENCH_CKPT_EVERY``,
-    ``REPRO_BENCH_RESUME``."""
+    ``REPRO_BENCH_RESUME``. ``use_pallas`` (env ``REPRO_BENCH_PALLAS``)
+    runs every figure on the Pallas-fused round hot path — fused gossip
+    mix + DP clip→noise→step; allclose to the plain-XLA reference."""
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
     rounds_per_block = rounds_per_block or _env_int("REPRO_BENCH_BLOCK") or 1
     staleness = staleness or _env_int("REPRO_BENCH_STALENESS")
@@ -161,6 +163,8 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     checkpoint_every = checkpoint_every or _env_int("REPRO_BENCH_CKPT_EVERY")
     if resume is None:
         resume = _env_flag("REPRO_BENCH_RESUME")
+    if use_pallas is None:
+        use_pallas = _env_flag("REPRO_BENCH_PALLAS")
     rows = []
     for method in methods:
         # proxy accuracies accumulate across seeds exactly like ``accs``
@@ -182,6 +186,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 alpha=alpha, beta=alpha, n_clients=n_clients, rounds=rounds,
                 batch_size=max(1, min(batch_size, mean_n)),
                 seed=seed, dropout_rate=dropout_rate, staleness=staleness,
+                use_pallas=bool(use_pallas),
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
             res = run_federated(
                 method, [priv] * n_clients, prox, client_data, test, cfg,

@@ -1,0 +1,94 @@
+"""Pallas-fused round hot path: rounds/sec fused vs plain (beyond-paper).
+
+The two chains that dominate a round's HBM traffic are the PushSum
+exchange (P·z matmul → P·w matmul → de-bias divide: three materialized
+[K, D]-sized passes under plain XLA) and the DP proxy update (per-example
+clip → accumulate → noise → Adam step — each a full pass over the
+gradient vector). ``ProxyFLConfig.use_pallas`` fuses both into blocked
+kernels (``repro.kernels``) that touch each parameter chunk ONCE per
+round. This figure measures the end-to-end effect: rounds/sec plain vs
+fused on identical DP cohorts at K ∈ {4, 8, 16}, plus the analytic
+bytes-moved-per-round of each exchange path.
+
+Bytes model (f32, D = proxy parameter count, exchange only):
+
+* plain    — read [K,D] + write P·z [K,D], then read it back + write the
+  de-biased [K,D]: ``4·B_D`` moved where ``B_D = 4·K·D`` bytes (the two
+  [K]-sized weight passes are noise);
+* fused    — read [K,D] once, write de-biased [K,D] once: ``2·B_D``.
+
+On CPU the fused kernels run in interpret mode, so the measured speedup
+there reflects dispatch/fusion differences only — the bytes column is the
+portable claim, the TPU rounds/sec the target metric. Results are also
+written as JSON (``REPRO_BENCH_KERNELS_JSON``, default
+``fig_kernels.json`` in the CWD) including ``speedup_fused`` per cohort.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.engine import dml_engine
+from repro.nn.modules import tree_flatten_vector
+
+from .common import FULL, federation_data, spec_of
+
+
+def _time_rounds(engine, data, key, rounds: int, trials: int = 3) -> float:
+    """Steady-state seconds per round (compile excluded: one warm-up
+    block; BEST of ``trials``, as in fig_blocks)."""
+    state = engine.init_states(key)
+    state, _ = engine.run_rounds(state, data, 0, rounds, key)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+    ts = []
+    for _ in range(trials):
+        t0 = time.time()
+        state, _ = engine.run_rounds(state, data, 0, rounds, key)
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        ts.append((time.time() - t0) / rounds)
+    return float(np.min(ts))
+
+
+def run(full: bool = FULL):
+    cohorts = (4, 8, 16)  # the acceptance grid — identical in both budgets
+    rounds = 8 if full else 4
+    dataset = "mnist"
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    for n_clients in cohorts:
+        client_data, _, d = federation_data(
+            dataset, n_clients, seed=0, n_train_factor=1.0 if full else 0.2)
+        spec = spec_of("mlp", d["shape"], d["n_classes"])
+        D = int(tree_flatten_vector(
+            spec.init(jax.random.PRNGKey(0))).shape[0])
+        bytes_kd = 4 * n_clients * D  # one f32 [K, D] pass
+        base = None
+        for fused in (False, True):
+            cfg = ProxyFLConfig(
+                n_clients=n_clients, rounds=rounds, local_steps=2,
+                batch_size=16, seed=0, use_pallas=fused,
+                dp=DPConfig(enabled=True, noise_multiplier=1.0,
+                            clip_norm=1.0))
+            engine = dml_engine((spec,) * n_clients, spec, cfg,
+                                backend="vmap")
+            sec = _time_rounds(engine, client_data, key, rounds)
+            if not fused:
+                base = sec
+            rows.append({
+                "dataset": dataset, "clients": n_clients, "d_params": D,
+                "path": "fused" if fused else "plain",
+                "sec_per_round": round(sec, 5),
+                "rounds_per_sec": round(1.0 / sec, 2),
+                "exchange_bytes_per_round": (2 if fused else 4) * bytes_kd,
+                "speedup_fused": round(base / sec, 2),
+            })
+    path = os.environ.get("REPRO_BENCH_KERNELS_JSON", "fig_kernels.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

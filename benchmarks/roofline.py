@@ -56,13 +56,15 @@ def run(full: bool = False) -> List[Dict]:
 
 def markdown_table(rows: List[Dict]) -> str:
     ok = [r for r in rows if r.get("status") == "ok"]
-    hdr = ("| arch | shape | mesh | tag | compute ms | memory ms | "
+    hdr = ("| arch | shape | mesh | program | tag | compute ms | memory ms | "
            "collective ms | dominant | HBM GiB/dev | fits | useful ratio |")
-    sep = "|" + "---|" * 11
+    sep = "|" + "---|" * 12
     lines = [hdr, sep]
-    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"], r["tag"])):
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r.get("program", ""), r["tag"])):
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} "
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('program', '')} | {r['tag']} "
             f"| {r['compute_ms']} | {r['memory_ms']} | {r['collective_ms']} "
             f"| {r['dominant']} | {r['hbm_gib_per_dev']} "
             f"| {'yes' if r['fits_16g'] else 'NO'} | {r['useful_ratio']} |")

@@ -6,9 +6,14 @@
 #                             # the fast slice of the cross-backend
 #                             # conformance matrix (tests/test_conformance.py:
 #                             # loop==vmap, ragged-on-vmap, blocked==per-round
-#                             # bitwise, the async-τ0==vmap equivalence smoke
-#                             # and async-τ2 block/resume bit-identity) so
-#                             # every PR exercises every compiled path
+#                             # bitwise, the async-τ0==vmap equivalence smoke,
+#                             # async-τ2 block/resume bit-identity, and the
+#                             # Pallas fused-vs-plain hot-path parity) plus
+#                             # the interpret-mode kernel smoke slice
+#                             # (tests/test_kernels.py: fused PushSum mix,
+#                             # stale mix, noise→SGD/Adam step vs the ref
+#                             # oracles) so every PR exercises every compiled
+#                             # path including the fused kernels
 #   scripts/ci.sh --smoke     # resume-correctness smoke: 4-client federation
 #                             # killed after round 2 of 3 and resumed (per-
 #                             # round, rounds_per_block=2 kill-after-block,

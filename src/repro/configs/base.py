@@ -247,3 +247,10 @@ class ProxyFLConfig:
     # modeling communication overlapped with the local scan (Assran et al.
     # 2019). 0 = synchronous delivery — bit-identical to the vmap backend.
     staleness: int = 0
+    # Pallas-fused round hot path: run the PushSum exchange and the DP
+    # clip→noise→step chain as blocked HBM→VMEM kernels (repro.kernels) —
+    # real Mosaic kernels on TPU, interpret mode elsewhere. Numerics are
+    # allclose to the plain-XLA path (same math, different reduction
+    # order), pinned by the use_pallas columns of tests/test_conformance.py.
+    # Off by default: plain XLA remains the reference semantics.
+    use_pallas: bool = False

@@ -181,6 +181,7 @@ def run_federated(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 0,
     resume: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> Dict:
     """Run ``cfg.rounds`` rounds of ``method``; return history + final state.
 
@@ -201,8 +202,15 @@ def run_federated(
     ``resume=True`` restarts from the newest snapshot and replays the
     remaining rounds bit-identically to an uninterrupted run (``history``
     then only covers the resumed rounds).
+
+    ``use_pallas`` overrides ``cfg.use_pallas`` (None keeps the config):
+    the Pallas-fused round hot path — fused PushSum exchange + fused DP
+    clip→noise→step; allclose to the plain-XLA reference, see
+    ``repro.core.engine`` ("Fused hot path").
     """
     assert method in METHODS, method
+    if use_pallas is not None:
+        cfg = dataclasses.replace(cfg, use_pallas=use_pallas)
     K = len(client_data)
     key = jax.random.PRNGKey(seed)
     xt, yt = test_data

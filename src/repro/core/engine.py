@@ -141,6 +141,33 @@ conservation and de-biased convergence to the ACTIVE average are
 preserved). Set ``ProxyFLConfig.dropout_rate`` for a deterministic
 per-round schedule, or pass ``active=`` explicitly to ``run_round``.
 
+Fused hot path (Pallas)
+-----------------------
+With ``ProxyFLConfig.use_pallas`` the two chains that dominate a round's
+HBM traffic each touch every parameter chunk ONCE:
+
+* the PushSum exchange — the matmul-mix backends (loop/vmap/async, both
+  per-round and round-block programs) route through
+  :func:`repro.core.gossip.pushsum_mix_debiased` /
+  :func:`repro.core.gossip.stale_mix_apply`, whose fused kernels
+  (``repro.kernels.pushsum_mix``) keep the small [K,K] exchange matrix
+  resident in VMEM and stream the stacked [K, D] proxies block-by-block,
+  computing mix + de-bias (and for the stale τ>0 split: re-bias, kept/sent
+  split, buffer merge, de-bias) in one HBM→VMEM pass per chunk instead of
+  XLA's materialized matmul → divide chain;
+* the DP proxy update — ``cfg.dp.enabled`` steps go through
+  :func:`repro.core.dp.dp_adam_update`, fusing per-microbatch clip→
+  accumulate (``repro.kernels.dp_clip``) and the trailing noise→Adam step
+  (``repro.kernels.dp_step``) over the flattened gradient vector.
+
+Dispatch is platform-aware (``repro.kernels.default_interpret``): real
+Mosaic kernels on TPU, interpret mode elsewhere. The fused path is
+allclose — not bit-identical — to the plain-XLA reference (f32
+accumulation, fused reduction order); tests/test_conformance.py pins the
+parity (params AND epsilon) per backend, and ``benchmarks/fig_kernels.py``
+measures the rounds/sec and bytes-moved-per-round effect. shard_map keeps
+its ppermute collective exchange regardless of the flag.
+
 Typical usage::
 
     engine = dml_engine((spec,) * K, proxy_spec, cfg)   # backend="auto"
@@ -175,7 +202,8 @@ from ..data.ragged import pad_compatible, pad_stack
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
 from .gossip import (gossip_shift, mix_matrix, mix_schedule,
-                     pushsum_gossip_shard, shard_map_fn, shift_schedule,
+                     pushsum_gossip_shard, pushsum_mix_debiased,
+                     shard_map_fn, shift_schedule, stale_mix_apply,
                      stale_mix_schedule, stale_mix_split)
 
 BACKENDS = ("loop", "vmap", "shard_map", "async")
@@ -372,6 +400,11 @@ class FederationEngine:
         # which is what makes τ=0 bit-identical to backend="vmap"
         self._wrapped = backend == "async" and self.staleness > 0
         self.backend = backend
+        # Pallas-fused exchange (cfg.use_pallas): the matmul-mix backends
+        # route through the fused blocked kernels in repro.kernels —
+        # allclose, not bit-identical, to the plain-XLA reference (f32
+        # accumulation, fused de-bias). shard_map keeps its ppermute path.
+        self.use_pallas = bool(getattr(cfg, "use_pallas", False))
         # donation lets XLA update params/opt in place; CPU only warns
         self._donate = (0,) if jax.default_backend() != "cpu" else ()
         self._masked_sampler = _sampler_accepts_n_valid(sample_fn)
@@ -632,11 +665,9 @@ class FederationEngine:
         if self.backend != "shard_map":  # vmap, or async at staleness=0
             rkey = ("vmap_block", T, n_steps, step_masked, pass_nv)
             if rkey not in self._rounds:
-                matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,
-                                             P.astype(w.dtype) @ w)
                 self._rounds[rkey] = self._build_block(
-                    T, n_steps, matmul if mixing else None, step_masked,
-                    pass_nv)
+                    T, n_steps, self._mix_matmul_op() if mixing else None,
+                    step_masked, pass_nv)
             if mixing:
                 Ps = jnp.asarray(
                     mix_schedule(self.mix, t0, T, self.K, self.cfg.topology,
@@ -711,9 +742,8 @@ class FederationEngine:
             flat = jnp.stack([tree_flatten_vector(s["proxy"]["params"])
                               for s in states])
             w = jnp.asarray([jnp.asarray(s["w"]) for s in states], flat.dtype)
-            mixed = jnp.asarray(P, flat.dtype) @ flat
-            w2 = jnp.asarray(P, w.dtype) @ w
-            unb = mixed / w2[:, None]
+            unb, w2 = pushsum_mix_debiased(flat, w, P,
+                                           use_pallas=self.use_pallas)
             like = states[0]["proxy"]["params"]
             for k in range(self.K):
                 states[k] = dict(states[k])
@@ -856,11 +886,13 @@ class FederationEngine:
                     pass_n_valid: bool = True):
         """One traceable program for the WHOLE synchronous round: the
         shared :meth:`_local_phase` followed by one graph exchange.
-        ``mix_op(flat, w, P) -> (mixed, w2)`` is the only backend
-        difference: a [K,K] matmul on the stacked proxies (vmap — P is a
-        runtime arg, so every round reuses one compilation) or a ppermute
-        collective (shard_map — the schedule is baked in, P is unused).
-        ``mix_op=None`` skips the exchange."""
+        ``mix_op(flat, w, P) -> (z2, w2)`` — the DE-BIASED mixed proxies
+        plus the mixed weights — is the only backend difference: the
+        stacked :func:`repro.core.gossip.pushsum_mix_debiased` exchange
+        (vmap — P is a runtime arg, so every round reuses one compilation;
+        plain matmuls or the Pallas-fused kernel per ``cfg.use_pallas``)
+        or a ppermute collective (shard_map — the schedule is baked in, P
+        is unused). ``mix_op=None`` skips the exchange."""
         local = self._local_phase(n_steps, step_masked, pass_n_valid)
 
         def round_fn(stacked, data, n_valid, steps, P, act, key):
@@ -870,8 +902,7 @@ class FederationEngine:
                 like = jax.tree_util.tree_map(lambda x: x[0], theta)
                 flat = jax.vmap(tree_flatten_vector)(theta)        # [K, D]
                 w = jnp.asarray(trained["w"], flat.dtype)
-                mixed, w2 = mix_op(flat, w, P)                     # on-device
-                unb = mixed / w2[:, None]
+                unb, w2 = mix_op(flat, w, P)                       # on-device
                 theta2 = jax.vmap(
                     lambda v: tree_unflatten_vector(v, like))(unb)
                 trained = dict(trained)
@@ -906,14 +937,11 @@ class FederationEngine:
                 like = jax.tree_util.tree_map(lambda x: x[0], theta_tree)
                 flat = jax.vmap(tree_flatten_vector)(theta_tree)   # [K, D]
                 w = jnp.asarray(trained["w"], flat.dtype)
-                theta = flat * w[:, None]              # raw PushSum numerator
-                send_t = sent.astype(flat.dtype) @ theta
-                send_w = sent.astype(w.dtype) @ w
-                mixed = kept.astype(flat.dtype)[:, None] * theta + buf_t[0]
-                w2 = kept.astype(w.dtype) * w + buf_w[0]
+                unb, send_t, w2, send_w = stale_mix_apply(
+                    flat, w, kept, sent, buf_t[0], buf_w[0],
+                    use_pallas=self.use_pallas)
                 buf_t = jnp.concatenate([buf_t[1:], send_t[None]])
                 buf_w = jnp.concatenate([buf_w[1:], send_w[None]])
-                unb = mixed / w2[:, None]
                 theta2 = jax.vmap(
                     lambda v: tree_unflatten_vector(v, like))(unb)
                 trained = dict(trained)
@@ -1060,16 +1088,32 @@ class FederationEngine:
 
         return jax.jit(block_fn, donate_argnums=self._donate)
 
+    def _mix_matmul_op(self):
+        """The stacked matmul exchange as a mix_op: ``(flat, w, P) ->
+        (z2, w2)`` de-biased, dispatched plain-XLA or Pallas-fused per
+        ``cfg.use_pallas``. One definition serves the single-round and
+        round-block programs so the two paths cannot drift."""
+        up = self.use_pallas
+        return lambda flat, w, P: pushsum_mix_debiased(flat, w, P,
+                                                       use_pallas=up)
+
     def _shard_mix_op(self, t: int, act_key):
         """ppermute exchange along ``self.axis``; t/active are trace-time
-        static (new collective schedule per membership pattern)."""
+        static (new collective schedule per membership pattern). The
+        collective returns pre-debias (mixed, w2); the de-bias divide
+        happens here so the mix_op contract matches the matmul path."""
         topo, sw = self._mix_topology()
         spec = jax.sharding.PartitionSpec(self.axis)
         gossip_sm = shard_map_fn(
             lambda f, w: pushsum_gossip_shard(
                 f, w, t, self.axis, self.K, topo, sw, active=act_key),
             self.mesh, in_specs=(spec, spec), out_specs=(spec, spec))
-        return lambda flat, w, P: gossip_sm(flat, w)
+
+        def op(flat, w, P):
+            mixed, w2 = gossip_sm(flat, w)
+            return mixed / w2[:, None], w2
+
+        return op
 
     def _stacked_inputs(self, data):
         """Shared prologue of the stacked round/block programs: padded
@@ -1103,10 +1147,9 @@ class FederationEngine:
         if self.backend != "shard_map":  # vmap, or async at staleness=0
             rkey = ("vmap", n_steps, step_masked, pass_nv)
             if rkey not in self._rounds:
-                matmul = lambda flat, w, P: (P.astype(flat.dtype) @ flat,
-                                             P.astype(w.dtype) @ w)
                 self._rounds[rkey] = self._build_round(
-                    n_steps, matmul if mixing else None, step_masked, pass_nv)
+                    n_steps, self._mix_matmul_op() if mixing else None,
+                    step_masked, pass_nv)
             if mixing:
                 P = jnp.asarray(
                     mix_matrix(self.mix, t, self.K, self.cfg.topology, act),

@@ -89,12 +89,65 @@ def adjacency_matrix(t: int, n_clients: int, topology: str = "exponential",
 # simulation backend: Θ^(t+1) = P^(t) Θ^(t)
 
 
-def pushsum_mix(thetas: jnp.ndarray, weights: jnp.ndarray, P: jnp.ndarray
+def pushsum_mix(thetas: jnp.ndarray, weights: jnp.ndarray, P: jnp.ndarray,
+                *, use_pallas: bool = False, interpret=None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """thetas: [K, D] stacked client vectors; weights: [K] de-bias weights.
-    Returns mixed (thetas, weights) — NOT yet de-biased."""
+    Returns mixed (thetas, weights) — NOT yet de-biased.
+
+    ``use_pallas=True`` routes through the fused blocked kernel
+    (:func:`repro.kernels.pushsum_mix.fused_pushsum_mix`, f32 accumulation,
+    one HBM→VMEM pass per parameter chunk); allclose to the plain matmuls."""
+    if use_pallas:
+        from ..kernels.pushsum_mix import fused_pushsum_mix
+        return fused_pushsum_mix(thetas, weights, P, debias=False,
+                                 interpret=interpret)
     P = jnp.asarray(P, thetas.dtype)
     return P @ thetas, P.astype(weights.dtype) @ weights
+
+
+def pushsum_mix_debiased(thetas: jnp.ndarray, weights: jnp.ndarray,
+                         P: jnp.ndarray, *, use_pallas: bool = False,
+                         interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The engine's whole stacked exchange (Algorithm 1 lines 7-11):
+    ``z' = (P·z) / (P·w)[:, None]``, ``w' = P·w`` — mix AND de-bias.
+
+    This is the single dispatch point the ``FederationEngine`` sync
+    backends call: plain XLA (two matmuls + divide, the reference
+    semantics) or the Pallas-fused kernel with the de-bias fused into the
+    same pass (``use_pallas``, per ``ProxyFLConfig.use_pallas``)."""
+    if use_pallas:
+        from ..kernels.pushsum_mix import fused_pushsum_mix
+        return fused_pushsum_mix(thetas, weights, P, debias=True,
+                                 interpret=interpret)
+    mixed = jnp.asarray(P, thetas.dtype) @ thetas
+    w2 = jnp.asarray(P, weights.dtype) @ weights
+    return mixed / w2[:, None], w2
+
+
+def stale_mix_apply(flat: jnp.ndarray, w: jnp.ndarray, kept: jnp.ndarray,
+                    sent: jnp.ndarray, buf_t0: jnp.ndarray,
+                    buf_w0: jnp.ndarray, *, use_pallas: bool = False,
+                    interpret=None):
+    """One stale (async τ>0) exchange on the stacked proxies — the
+    delayed-delivery counterpart of :func:`pushsum_mix_debiased` and the
+    on-device application of :func:`stale_gossip_reference`'s round body:
+    re-bias θ = z·w, emit ``send = sent @ θ``, merge ``kept·θ`` with the
+    delivery ``buf_t0``/``buf_w0`` rotating out of the in-flight buffer,
+    de-bias by the identically-delayed weights. Returns ``(z', send_t,
+    w', send_w)``; the caller owns the buffer rotation. ``use_pallas``
+    fuses the whole chain into one blocked pass per parameter chunk
+    (:func:`repro.kernels.pushsum_mix.fused_stale_mix`)."""
+    if use_pallas:
+        from ..kernels.pushsum_mix import fused_stale_mix
+        return fused_stale_mix(flat, w, kept, sent, buf_t0, buf_w0,
+                               interpret=interpret)
+    theta = flat * w[:, None]                  # raw PushSum numerator
+    send_t = sent.astype(flat.dtype) @ theta
+    send_w = sent.astype(w.dtype) @ w
+    mixed = kept.astype(flat.dtype)[:, None] * theta + buf_t0
+    w2 = kept.astype(w.dtype) * w + buf_w0
+    return mixed / w2[:, None], send_t, w2, send_w
 
 
 def mix_matrix(mix: str, t: int, n_clients: int, topology: str = "exponential",

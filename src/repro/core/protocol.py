@@ -25,7 +25,7 @@ from ..nn.losses import cross_entropy, dml_loss
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
 from .accountant import PrivacyAccountant
-from .dp import dp_gradient, non_dp_gradient
+from .dp import dp_adam_update, dp_gradient, non_dp_gradient
 from .gossip import debias, pushsum_mix
 
 Params = Any
@@ -74,18 +74,26 @@ def dml_step_fn(private_spec: ModelSpec, proxy_spec: ModelSpec,
 
     def step(phi, opt_phi, theta, opt_theta, batch, key):
         # proxy first in code order, but both use round-start params
-        if cfg.dp.enabled:
+        if cfg.dp.enabled and cfg.use_pallas:
+            # fused clip→noise→Adam hot path (repro.kernels); allclose to
+            # the dp_gradient + opt.update chain below, never bit-exact
+            theta2, opt_theta2, m_theta = dp_adam_update(
+                lambda t, b: proxy_loss(t, b, phi), theta, opt_theta,
+                batch, key, opt=opt, clip_norm=cfg.dp.clip_norm,
+                noise_multiplier=cfg.dp.noise_multiplier)
+        elif cfg.dp.enabled:
             g_theta, m_theta = dp_gradient(
                 lambda t, b: proxy_loss(t, b, phi), theta, batch, key,
                 clip_norm=cfg.dp.clip_norm,
                 noise_multiplier=cfg.dp.noise_multiplier,
                 vectorized=cfg.dp.vectorized)
+            theta2, opt_theta2 = opt.update(g_theta, opt_theta, theta)
         else:
             g_theta, m_theta = non_dp_gradient(
                 lambda t, b: proxy_loss(t, b, phi), theta, batch)
+            theta2, opt_theta2 = opt.update(g_theta, opt_theta, theta)
         g_phi, m_phi = non_dp_gradient(
             lambda p, b: private_loss(p, b, theta), phi, batch)
-        theta2, opt_theta2 = opt.update(g_theta, opt_theta, theta)
         phi2, opt_phi2 = opt.update(g_phi, opt_phi, phi)
         return phi2, opt_phi2, theta2, opt_theta2, {
             "private_loss": m_phi["loss"], "proxy_loss": m_theta["loss"]}
@@ -109,14 +117,20 @@ def ce_step_fn(spec: ModelSpec, cfg: ProxyFLConfig, dp: bool):
         return cross_entropy(spec.apply(params, x), y)
 
     def step(params, opt_state, batch, key):
-        if dp:
+        if dp and cfg.use_pallas:
+            params2, opt_state2, m = dp_adam_update(
+                loss, params, opt_state, batch, key, opt=opt,
+                clip_norm=cfg.dp.clip_norm,
+                noise_multiplier=cfg.dp.noise_multiplier)
+        elif dp:
             g, m = dp_gradient(loss, params, batch, key,
                                clip_norm=cfg.dp.clip_norm,
                                noise_multiplier=cfg.dp.noise_multiplier,
                                vectorized=cfg.dp.vectorized)
+            params2, opt_state2 = opt.update(g, opt_state, params)
         else:
             g, m = non_dp_gradient(loss, params, batch)
-        params2, opt_state2 = opt.update(g, opt_state, params)
+            params2, opt_state2 = opt.update(g, opt_state, params)
         return params2, opt_state2, m["loss"]
 
     return step

@@ -1,12 +1,56 @@
-"""Pallas TPU kernels for the compute hot spots, each validated in
-interpret mode against a pure-jnp oracle in ``ref.py``:
+"""Pallas TPU kernels for the round hot path and the LLM compute hot
+spots, each validated against a pure-jnp oracle in ``ref.py``.
 
-- ``flash_attention`` — causal/sliding-window attention (prefill hot spot)
-- ``mamba_scan``      — chunked selective scan (SSM/hybrid archs)
-- ``dp_clip``         — fused per-example clip+accumulate (DP-SGD, Eq. 7)
+Dispatch policy
+---------------
+Every kernel takes ``interpret: Optional[bool] = None``. ``None`` resolves
+via :func:`default_interpret`: REAL Mosaic kernels on TPU, ``interpret=True``
+everywhere else (CPU CI, GPU). Interpret mode traces the kernel body into
+ordinary XLA ops, so the fallback is just another jittable program — the
+same numerics run on every platform and the conformance matrix
+(tests/test_conformance.py) pins the fused paths allclose to plain XLA.
+Callers never hardcode ``interpret=True``; pass an explicit bool only to
+force a mode (the kernel sweeps in tests/test_kernels.py do).
+
+Kernel → engine-path map
+------------------------
+- ``pushsum_mix.fused_pushsum_mix`` — θ'/w' PushSum exchange over the
+  stacked [K, D] proxies with fused de-bias (Algorithm 1 lines 7-11).
+  Serves ``FederationEngine`` vmap/async-τ0 round-blocks and the loop
+  backend's host-side gossip, behind ``ProxyFLConfig.use_pallas`` via
+  :func:`repro.core.gossip.pushsum_mix_debiased`.
+- ``pushsum_mix.fused_stale_mix`` — the async backend's stale (τ>0)
+  exchange: re-bias θ = z·w, keep the diagonal, emit the off-diagonal
+  send, merge the delayed delivery and de-bias — one pass per chunk.
+  Serves ``_stale_round_core`` via :func:`repro.core.gossip.stale_mix_apply`.
+- ``dp_clip.sumsq`` / ``dp_clip.scale_accumulate`` — per-example clip +
+  accumulate of DP-SGD (Eq. 7). Serve ``repro.core.dp.dp_gradient``'s
+  scan path when ``use_pallas`` is on, and ``ops.tree_clip_accumulate``.
+- ``dp_step.noise_adam_step`` / ``dp_step.noise_sgd_step`` — the tail of
+  the DP chain fused: noise-add, clipped-mean divide, weight decay and
+  the optimizer update touch each gradient chunk once. Serve
+  ``repro.core.dp.dp_adam_update`` (wired into the ProxyFL/CE step fns).
+- ``flash_attention`` / ``mamba_scan`` / ``rmsnorm`` — LLM-scale forward
+  hot spots (prefill attention, selective scan, norm), used by
+  ``repro.nn`` transformer/SSM blocks.
 """
-from . import ref
-from .ops import (
+import jax
+
+
+def default_interpret() -> bool:
+    """Platform autodetect for the ``interpret=None`` kernel default:
+    compile real Mosaic kernels only on TPU; interpret elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """``None`` -> platform default; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+from . import ref  # noqa: E402  (helpers above must exist before submodules)
+from .dp_step import noise_adam_step, noise_sgd_step  # noqa: E402
+from .ops import (  # noqa: E402
     clip_accumulate,
     flash_attention,
     gqa_flash_attention,
@@ -15,13 +59,20 @@ from .ops import (
     sumsq,
     tree_clip_accumulate,
 )
+from .pushsum_mix import fused_pushsum_mix, fused_stale_mix  # noqa: E402
 
 __all__ = [
     "ref",
+    "default_interpret",
+    "resolve_interpret",
     "clip_accumulate",
     "flash_attention",
+    "fused_pushsum_mix",
+    "fused_stale_mix",
     "gqa_flash_attention",
     "mamba_scan",
+    "noise_adam_step",
+    "noise_sgd_step",
     "scale_accumulate",
     "sumsq",
     "tree_clip_accumulate",

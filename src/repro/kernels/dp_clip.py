@@ -13,11 +13,14 @@ blocking on the VPU).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import resolve_interpret
 
 
 def _sumsq_kernel(x_ref, o_ref):
@@ -26,7 +29,8 @@ def _sumsq_kernel(x_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def sumsq(x: jnp.ndarray, *, block: int = 65536, interpret: bool = True) -> jnp.ndarray:
+def sumsq(x: jnp.ndarray, *, block: int = 65536,
+          interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sum of squares of a 1-D vector (f32 accumulation)."""
     n = x.shape[0]
     b = min(block, max(n, 1))
@@ -39,7 +43,7 @@ def sumsq(x: jnp.ndarray, *, block: int = 65536, interpret: bool = True) -> jnp.
         in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
         out_specs=pl.BlockSpec((1,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)
     return jnp.sum(partial_sums)
 
@@ -51,7 +55,8 @@ def _scale_acc_kernel(scale_ref, acc_ref, g_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def scale_accumulate(acc: jnp.ndarray, g: jnp.ndarray, scale: jnp.ndarray,
-                     *, block: int = 65536, interpret: bool = True) -> jnp.ndarray:
+                     *, block: int = 65536,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """acc + g * scale for 1-D f32 acc / any-dtype g, blockwise."""
     n = acc.shape[0]
     b = min(block, max(n, 1))
@@ -70,14 +75,15 @@ def scale_accumulate(acc: jnp.ndarray, g: jnp.ndarray, scale: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((b,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_blocks * b,), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(scale.reshape(1).astype(jnp.float32), acc, g)
     return out[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("clip_norm", "block", "interpret"))
 def clip_accumulate(acc: jnp.ndarray, g: jnp.ndarray, clip_norm: float,
-                    *, block: int = 65536, interpret: bool = True) -> jnp.ndarray:
+                    *, block: int = 65536,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """One per-example DP-SGD update of the gradient accumulator:
     acc += g / max(1, ||g||/C)  — Eq. (7) clip + sum, fused."""
     norm = jnp.sqrt(sumsq(g, block=block, interpret=interpret))

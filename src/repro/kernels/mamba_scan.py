@@ -14,11 +14,14 @@ Computes: h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t x_t) B_t ;  y_t = C_t · h_t.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import resolve_interpret
 
 
 def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *, chunk: int):
@@ -53,7 +56,7 @@ def mamba_scan(
     *,
     chunk: int = 128,
     block_d: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     B, S, di = x.shape
     ds = A.shape[1]
@@ -81,6 +84,6 @@ def mamba_scan(
         out_specs=pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
         out_shape=jax.ShapeDtypeStruct((B, S_pad, di), x.dtype),
         scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(dt, x, B_in, C_in, A)
     return y[:, :S]

@@ -15,7 +15,8 @@ from .rmsnorm import rmsnorm
 
 
 def gqa_flash_attention(q, k, v, *, causal=True, window=None, scale=None,
-                        block_q=128, block_k=128, interpret=True):
+                        block_q=128, block_k=128,
+                        interpret: Optional[bool] = None):
     """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] (model-stack layout).
     Broadcasts KV heads for grouped queries and calls the Pallas kernel."""
     B, S, Hq, D = q.shape
@@ -32,7 +33,7 @@ def gqa_flash_attention(q, k, v, *, causal=True, window=None, scale=None,
 
 
 def tree_clip_accumulate(acc_tree, grad_tree, clip_norm: float, *,
-                         interpret=True):
+                         interpret: Optional[bool] = None):
     """Eq. (7) clip+accumulate on whole parameter pytrees via the fused
     flat kernels (norm over ALL leaves jointly, as DP-SGD requires)."""
     flat_g = tree_flatten_vector(grad_tree)

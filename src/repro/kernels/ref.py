@@ -64,3 +64,51 @@ def rmsnorm_ref(x, g, eps: float = 1e-6) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def fused_pushsum_mix_ref(flat, w, P, *, debias: bool = True):
+    """Synchronous PushSum exchange, f32 accumulation: (P·z [/ P·w], P·w)."""
+    Pf = jnp.asarray(P, jnp.float32)
+    mixed = Pf @ flat.astype(jnp.float32)
+    w2 = Pf @ w.astype(jnp.float32)
+    if debias:
+        mixed = mixed / w2[:, None]
+    return mixed.astype(flat.dtype), w2.astype(w.dtype)
+
+
+def fused_stale_mix_ref(flat, w, kept, sent, buf_t0, buf_w0):
+    """Stale (async τ>0) exchange: re-bias θ = z·w, split kept/sent, merge
+    the delayed delivery, de-bias — returns (z', send_t, w', send_w)."""
+    wf = w.astype(jnp.float32)
+    theta = flat.astype(jnp.float32) * wf[:, None]
+    send_t = sent.astype(jnp.float32) @ theta
+    send_w = sent.astype(jnp.float32) @ wf
+    mixed = kept.astype(jnp.float32)[:, None] * theta \
+        + buf_t0.astype(jnp.float32)
+    w2 = kept.astype(jnp.float32) * wf + buf_w0.astype(jnp.float32)
+    z2 = mixed / w2[:, None]
+    return (z2.astype(flat.dtype), send_t.astype(flat.dtype),
+            w2.astype(w.dtype), send_w.astype(w.dtype))
+
+
+def noise_sgd_step_ref(acc, noise, p, *, stddev, n_units, lr,
+                       weight_decay=0.0):
+    g = (acc.astype(jnp.float32) + stddev * noise.astype(jnp.float32)) \
+        / n_units
+    pf = p.astype(jnp.float32)
+    g = g + weight_decay * pf
+    return (pf - lr * g).astype(p.dtype)
+
+
+def noise_adam_step_ref(acc, noise, p, m, v, *, stddev, n_units, lr,
+                        weight_decay=0.0, b1=0.9, b2=0.999, eps=1e-8,
+                        c1=None, c2=None):
+    g = (acc.astype(jnp.float32) + stddev * noise.astype(jnp.float32)) \
+        / n_units
+    pf = p.astype(jnp.float32)
+    g = g + weight_decay * pf
+    m2 = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+    v2 = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
+    step = lr * (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+    return ((pf - step).astype(p.dtype), m2.astype(m.dtype),
+            v2.astype(v.dtype))

@@ -13,10 +13,13 @@ rows_block=256 sits comfortably in the ~16 MiB VMEM budget.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import resolve_interpret
 
 
 def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
@@ -28,7 +31,8 @@ def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
 def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, *, eps: float = 1e-6,
-            block_rows: int = 256, interpret: bool = True) -> jnp.ndarray:
+            block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused RMSNorm. x: [..., d]; g: [d]. Returns x.dtype."""
     orig_shape = x.shape
     d = orig_shape[-1]
@@ -48,7 +52,7 @@ def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, *, eps: float = 1e-6,
                   pl.BlockSpec((d,), lambda i: (0,))],
         out_specs=pl.BlockSpec((b, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_blocks * b, d), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xf, g)
     if pad:
         out = out[:rows]

@@ -43,7 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs import INPUT_SHAPES, get_config, list_archs
 from ..configs.base import DPConfig, InputShape, ModelConfig, ProxyFLConfig
 from ..configs.registry import proxy_of
-from .mesh import TPU_V5E, make_production_mesh
+from .mesh import TPU_V5E, make_production_mesh, mesh_context
 from .sharding import batch_pspecs, cache_pspecs, named, tree_pspecs
 from .steps import (
     StepOptions,
@@ -51,12 +51,17 @@ from .steps import (
     make_decode_step,
     make_fl_round_step,
     make_prefill_step,
+    make_round_block_step,
     make_train_step,
     serve_shardings,
     serve_state_shapes,
     train_shardings,
     train_state_shapes,
 )
+
+#: rounds fused into one program by ``--program round_block`` (the engine's
+#: round-block unit; static — each round's ppermute schedule is baked in)
+BLOCK_ROUNDS = 4
 
 # Architectures with sub-quadratic context handling run long_500k; pure
 # full-attention architectures skip it (DESIGN.md "long_500k skip decisions").
@@ -192,9 +197,10 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
     key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
     t0 = time.time()
 
-    if program in ("train", "fl_round"):
+    if program in ("train", "fl_round", "round_block"):
         proxy = proxy_of(cfg)
-        n_clients = mesh.shape.get("pod", 0) if program == "fl_round" else 0
+        n_clients = (mesh.shape.get("pod", 0)
+                     if program in ("fl_round", "round_block") else 0)
         state_sds = train_state_shapes(cfg, proxy, fl, opts)
         if n_clients:
             state_sds = jax.tree_util.tree_map(
@@ -209,6 +215,12 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             step = make_fl_round_step(cfg, proxy, fl, mesh, n_clients, opts,
                                       round_t=0)
             metrics_spec = {"private_loss": P("pod"), "proxy_loss": P("pod")}
+        elif program == "round_block":
+            step = make_round_block_step(cfg, proxy, fl, mesh, n_clients,
+                                         opts, n_rounds=BLOCK_ROUNDS)
+            # metrics stacked [n_rounds, K]: round dim replicated, K on pod
+            metrics_spec = {"private_loss": P(None, "pod"),
+                            "proxy_loss": P(None, "pod")}
         else:
             step = make_train_step(cfg, proxy, fl, opts)
             metrics_spec = {"private_loss": P(), "proxy_loss": P()}
@@ -223,7 +235,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         arg_bytes_dev = (sharded_bytes_per_device(state_sds, state_spec, mesh)
                          + sharded_bytes_per_device(batch_sds, batch_spec, mesh))
         mf = model_flops(cfg, shape, proxy)
-    if program not in ("train", "fl_round"):
+        if program == "round_block":
+            mf *= BLOCK_ROUNDS  # the program does n_rounds rounds of work
+    if program not in ("train", "fl_round", "round_block"):
         modes = None
         state_sds = serve_state_shapes(cfg, shape)
         batch_sds = input_specs(cfg, shape)
@@ -244,7 +258,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
                          + sharded_bytes_per_device(batch_sds, batch_spec, mesh))
         mf = model_flops(cfg, shape, None)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -307,7 +321,8 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
     ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
     ap.add_argument("--program", default="auto",
-                    choices=("auto", "train", "fl_round", "prefill", "decode"))
+                    choices=("auto", "train", "fl_round", "round_block",
+                             "prefill", "decode"))
     ap.add_argument("--all", action="store_true",
                     help="every (arch × shape) for the chosen mesh(es)")
     ap.add_argument("--out", default="results/dryrun", help="JSON output dir")

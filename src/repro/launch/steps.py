@@ -316,6 +316,38 @@ def make_fl_round_step(cfg_priv: ModelConfig, cfg_proxy: ModelConfig,
     return round_step
 
 
+def make_round_block_step(cfg_priv: ModelConfig, cfg_proxy: ModelConfig,
+                          fl: ProxyFLConfig, mesh, n_clients: int,
+                          opts: StepOptions = StepOptions(),
+                          n_rounds: int = 4, t0: int = 0):
+    """A whole FUSED round-block as one program: ``n_rounds`` consecutive
+    Algorithm-1 rounds (local DML + PushSum ppermute each) unrolled inside
+    a single jit — the multi-pod counterpart of the FederationEngine's
+    round-blocks, and the unit ``dryrun.py --program round_block`` lowers
+    so the roofline reports amortized per-BLOCK cost (the per-round
+    collective schedules are static, exactly like ``_build_block``'s
+    shard_map path). Per-round keys fold in from the stacked client keys,
+    so the block replays the same per-round RNG schedule as ``n_rounds``
+    separate ``make_fl_round_step`` dispatches with ``fold_in(keys, t)``
+    applied by the host. Metrics come back stacked [n_rounds, K]."""
+    rounds = [make_fl_round_step(cfg_priv, cfg_proxy, fl, mesh, n_clients,
+                                 opts, round_t=t0 + i)
+              for i in range(n_rounds)]
+
+    def block_step(stacked_state, stacked_batch, keys):
+        ms = []
+        for i, round_step in enumerate(rounds):
+            round_keys = jax.vmap(
+                lambda kk: jax.random.fold_in(kk, t0 + i))(keys)
+            stacked_state, m = round_step(stacked_state, stacked_batch,
+                                          round_keys)
+            ms.append(m)
+        metrics = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ms)
+        return stacked_state, metrics
+
+    return block_step
+
+
 # ---------------------------------------------------------------------------
 # serve steps (private model inference)
 

@@ -134,6 +134,14 @@ def main(argv=None) -> int:
                     help="per-client corpus size skew in [0, 1): client k "
                          "holds ~64*(1-skew)^k sequences, a ragged cohort "
                          "that exercises the padded/masked vmap path")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="Pallas-fused round hot path: the PushSum exchange "
+                         "runs as one blocked HBM->VMEM kernel pass (real "
+                         "Mosaic kernels on TPU, interpret mode elsewhere); "
+                         "allclose to the plain-XLA path. The LLM DP step "
+                         "keeps its chunked XLA path — the fused DP "
+                         "clip->noise->step applies to the classifier-scale "
+                         "protocol steps (repro.core.protocol)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="snapshot complete federation state here (enables "
                          "preemption-tolerant runs; see repro.checkpoint)")
@@ -154,6 +162,7 @@ def main(argv=None) -> int:
         local_steps=args.steps_per_round, lr=args.lr, batch_size=args.batch,
         topology=args.topology, seed=args.seed,
         dropout_rate=args.dropout_rate, staleness=args.staleness,
+        use_pallas=args.use_pallas,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,
                     noise_multiplier=args.sigma))
     if args.staleness and args.backend != "async":

@@ -28,6 +28,15 @@ backend invariant (staleness delays gossip delivery, never local compute,
 so sample rates and step counts cannot change — asserted explicitly by
 the ``async-t2-epsilon-matches-sync`` case).
 
+The ``pallas-*`` cases pin the Pallas-fused round hot path
+(``ProxyFLConfig.use_pallas`` — fused gossip mix + DP clip→noise→step,
+interpret mode on CPU): fused vs plain is ``close`` on loop, vmap and
+async-τ2 (f32 kernel accumulation — same math, different reduction
+order), epsilon stays EXACT (the accountant is host-side and the fused
+path never changes step counts), and fused round-blocks stay bit-identical
+to fused per-round execution. A run tuple may carry a third element —
+``(backend, rounds_per_block, use_pallas)`` — to fuse one side only.
+
 The ``fast``-marked subset is the CI smoke (scripts/ci.sh --fast): it
 covers loop==vmap, ragged-on-vmap, block bit-identity, the async-τ0
 equivalence smoke and async-τ2 block/resume bit-identity without
@@ -88,8 +97,9 @@ def run_cache():
 @dataclass(frozen=True)
 class Case:
     id: str
-    # (backend, rounds_per_block) of the reference and each candidate run;
-    # backend None = run_federated's default ("auto")
+    # (backend, rounds_per_block[, use_pallas]) of the reference and each
+    # candidate run; backend None = run_federated's default ("auto"), the
+    # optional third element fuses that run's hot path (default False)
     ref: Tuple
     cands: Tuple
     expect: str = "exact"          # "exact" | "close" | "epsilon"
@@ -102,7 +112,7 @@ class Case:
 def _c(id, ref, cands, **kw):
     cfg = {k: kw.pop(k) for k in list(kw)
            if k in ("rounds", "local_steps", "dropout_rate", "staleness",
-                    "dp", "seed")}
+                    "dp", "seed", "use_pallas")}
     return Case(id=id, ref=ref, cands=tuple(cands),
                 cfg=tuple(sorted(cfg.items())), **kw)
 
@@ -167,6 +177,19 @@ CASES = [
     _c("async-t2-epsilon-matches-sync", ("vmap", 1), [("async", 1)],
        expect="epsilon", fast=True, rounds=3, local_steps=2, dp=True,
        dropout_rate=0.25, staleness=2),
+    # -- Pallas-fused hot path vs plain XLA: allclose on every matmul-mix
+    #    backend, epsilon exact (accountant untouched by fusion) ----------
+    _c("pallas-vmap-vs-plain", ("vmap", 1), [("vmap", 1, True)],
+       expect="close", fast=True, rounds=2, local_steps=2, dp=True),
+    _c("pallas-loop-vs-plain", ("loop", 1), [("loop", 1, True)],
+       expect="close", rounds=2, local_steps=2, dp=True),
+    _c("pallas-async-t2-vs-plain", ("async", 1), [("async", 1, True)],
+       expect="close", rounds=3, local_steps=2, dp=True, staleness=2),
+    _c("pallas-ragged-vs-plain", ("vmap", 1), [("vmap", 1, True)],
+       expect="close", data="ragged", rounds=2, local_steps=0, dp=True),
+    # fused round-blocks == fused per-round, bit for bit (same program)
+    _c("pallas-blocks-bitwise", ("vmap", 1), [("vmap", 2), ("vmap", 4)],
+       fast=True, rounds=4, local_steps=2, dp=True, use_pallas=True),
 ]
 
 
@@ -188,15 +211,17 @@ def _final_flats(res):
     return out
 
 
-def _run(cache, case: Case, mlp_spec, datasets, backend, rpb):
-    memo_key = (case.method, case.data, case.cfg, backend, rpb)
+def _run(cache, case: Case, mlp_spec, datasets, backend, rpb,
+         pallas=False):
+    memo_key = (case.method, case.data, case.cfg, backend, rpb, pallas)
     if memo_key in cache:
         return cache[memo_key]
     cfg = _mk_cfg(case)
     data = datasets[case.data]
     res = run_federated(case.method, [mlp_spec] * K, mlp_spec, data,
                         data[0], cfg, seed=0, eval_every=cfg.rounds,
-                        backend=backend, rounds_per_block=rpb)
+                        backend=backend, rounds_per_block=rpb,
+                        use_pallas=pallas or None)
     out = {"flats": _final_flats(res),
            "epsilon": tuple(res["epsilon"]),
            "hist_rounds": tuple(r["round"] for r in res["history"])}
@@ -213,9 +238,12 @@ def _case_params():
 @pytest.mark.parametrize("case", _case_params())
 def test_conformance(case, run_cache, mlp_spec, datasets):
     ref = _run(run_cache, case, mlp_spec, datasets, *case.ref)
-    for backend, rpb in case.cands:
-        got = _run(run_cache, case, mlp_spec, datasets, backend, rpb)
-        label = f"{case.id}: {case.ref} vs ({backend}, B={rpb})"
+    for cand in case.cands:
+        backend, rpb, pallas = (tuple(cand) + (False,))[:3]
+        got = _run(run_cache, case, mlp_spec, datasets, backend, rpb,
+                   pallas)
+        label = (f"{case.id}: {case.ref} vs ({backend}, B={rpb}"
+                 f"{', pallas' if pallas else ''})")
         assert got["epsilon"] == ref["epsilon"], f"{label}: epsilon differs"
         if case.expect == "epsilon":
             continue
@@ -238,13 +266,19 @@ def test_conformance_table_sanity():
     method added without a conformance row) would hollow the suite out."""
     ids = [c.id for c in CASES]
     assert len(ids) == len(set(ids))
-    backends = {b for c in CASES for b, _ in (c.ref,) + c.cands}
+    backends = {run[0] for c in CASES for run in (c.ref,) + c.cands}
     assert {"loop", "vmap", "async", None} <= backends
     missing = set(METHODS) - {c.method for c in CASES}
     assert not missing, f"METHODS without a conformance case: {missing}"
     assert any(dict(c.cfg).get("staleness") for c in CASES)
     assert any(c.data == "ragged" for c in CASES)
     assert any(c.fast for c in CASES)
+    # the fused hot path must keep a column per matmul-mix backend, plus
+    # one fused-vs-fused block bit-identity case
+    fused_backends = {run[0] for c in CASES for run in (c.ref,) + c.cands
+                      if len(run) > 2 and run[2]}
+    assert {"loop", "vmap", "async"} <= fused_backends
+    assert any(dict(c.cfg).get("use_pallas") for c in CASES)
 
 
 @pytest.mark.fast

@@ -5,10 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, st
 from repro.kernels import ops, ref
 from repro.kernels.dp_clip import clip_accumulate, scale_accumulate, sumsq
+from repro.kernels.dp_step import noise_adam_step, noise_sgd_step
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.pushsum_mix import fused_pushsum_mix, fused_stale_mix
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -149,3 +152,189 @@ def test_tree_clip_accumulate_matches_global_norm():
                     jax.tree_util.tree_leaves(want)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused PushSum mix kernels (the round hot path's exchange)
+
+
+def _mix_inputs(key, K, D, dtype):
+    kf, kw, kp = jax.random.split(key, 3)
+    flat = jax.random.normal(kf, (K, D), dtype)
+    w = jax.random.uniform(kw, (K,), dtype, 0.3, 2.0)
+    P = jax.random.uniform(kp, (K, K), jnp.float32, 0.1, 1.0)
+    P = P / P.sum(axis=0, keepdims=True)  # column-stochastic
+    return flat, w, P
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("K,D,block", [
+    (1, 300, 8192),    # K=1 degenerate cohort
+    (4, 300, 128),     # D not block-divisible, several blocks
+    (4, 100, 8192),    # D smaller than one block
+    (8, 1000, 256),
+])
+@pytest.mark.parametrize("debias", [True, False])
+def test_fused_pushsum_mix_shapes(K, D, block, debias):
+    flat, w, P = _mix_inputs(jax.random.PRNGKey(0), K, D, jnp.float32)
+    got_z, got_w = fused_pushsum_mix(flat, w, P, debias=debias, block=block,
+                                     interpret=True)
+    want_z, want_w = ref.fused_pushsum_mix_ref(flat, w, P, debias=debias)
+    np.testing.assert_allclose(np.asarray(got_z), np.asarray(want_z),
+                               **TOL[jnp.float32])
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_pushsum_mix_dtypes(dtype):
+    flat, w, P = _mix_inputs(jax.random.PRNGKey(1), 4, 777, dtype)
+    got_z, got_w = fused_pushsum_mix(flat, w, P, block=256, interpret=True)
+    want_z, want_w = ref.fused_pushsum_mix_ref(flat, w, P)
+    assert got_z.dtype == dtype and got_w.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got_z, np.float32),
+                               np.asarray(want_z, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(got_w, np.float32),
+                               np.asarray(want_w, np.float32), **TOL[dtype])
+
+
+def _stale_inputs(key, K, D, dtype):
+    flat, w, P = _mix_inputs(key, K, D, dtype)
+    kept = jnp.diag(P)
+    sent = P - jnp.diag(kept)
+    kb = jax.random.fold_in(key, 9)
+    buf_t0 = jax.random.normal(kb, (K, D), dtype) * 0.1
+    buf_w0 = jax.random.uniform(jax.random.fold_in(kb, 1), (K,), dtype,
+                                0.0, 0.5)
+    return flat, w, kept, sent, buf_t0, buf_w0
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("K,D,block,dtype", [
+    (1, 300, 8192, jnp.float32),
+    (4, 300, 128, jnp.float32),   # ragged: D % block != 0
+    (4, 100, 8192, jnp.float32),  # D < one block
+    (8, 777, 256, jnp.bfloat16),
+])
+def test_fused_stale_mix(K, D, block, dtype):
+    args = _stale_inputs(jax.random.PRNGKey(2), K, D, dtype)
+    got = fused_stale_mix(*args, block=block, interpret=True)
+    want = ref.fused_stale_mix_ref(*args)
+    for g, wnt in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(wnt, np.float32), **TOL[dtype])
+
+
+@given(st.integers(0, 40), st.integers(2, 9), st.integers(1, 40))
+def test_fused_mix_conserves_mass_property(t, K, D):
+    """Column-stochastic P conserves PushSum mass through the FUSED
+    exchange: per coordinate Σ_k z'_k·w'_k == Σ_k z_k (the kernel mixes
+    the stacked vectors directly), and Σ w' == Σ w — the fused-path twin
+    of test_gossip's mass-conservation properties."""
+    from repro.core.gossip import mix_matrix
+    P = jnp.asarray(mix_matrix("pushsum", t, K, "exponential"), jnp.float32)
+    flat, w, _ = _mix_inputs(jax.random.PRNGKey(t * 31 + K), K, D,
+                             jnp.float32)
+    z2, w2 = fused_pushsum_mix(flat, w, P, debias=True, block=16,
+                               interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(z2) * np.asarray(w2)[:, None], np.asarray(P @ flat),
+        rtol=1e-5, atol=1e-6)  # de-bias is exactly the mixed mass / w'
+    np.testing.assert_allclose(np.asarray(z2 * w2[:, None]).sum(0),
+                               np.asarray(flat).sum(0), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(float(w2.sum()), float(w.sum()), rtol=1e-5)
+
+
+@pytest.mark.fast
+def test_fused_mix_conserves_mass_deterministic():
+    """Pinned twin of the property above (runs even without hypothesis)."""
+    from repro.core.gossip import mix_matrix
+    K, D = 4, 33
+    P = jnp.asarray(mix_matrix("pushsum", 3, K, "exponential"), jnp.float32)
+    flat, w, _ = _mix_inputs(jax.random.PRNGKey(5), K, D, jnp.float32)
+    z2, w2 = fused_pushsum_mix(flat, w, P, debias=True, block=16,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(z2 * w2[:, None]).sum(0),
+                               np.asarray(flat).sum(0), rtol=1e-5)
+    np.testing.assert_allclose(float(w2.sum()), float(w.sum()), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused noise + optimizer step kernels (the DP hot path's tail)
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("n,block", [(100, 65536),   # n < one block
+                                     (1000, 256),    # n % block != 0
+                                     (4096, 1024)])
+def test_noise_sgd_step(n, block):
+    k = jax.random.PRNGKey(0)
+    acc = jax.random.normal(k, (n,))
+    noise = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    p = jax.random.normal(jax.random.fold_in(k, 2), (n,))
+    kw = dict(stddev=1.7, n_units=8, lr=1e-2, weight_decay=1e-4)
+    got = noise_sgd_step(acc, noise, p, block=block, interpret=True, **kw)
+    want = ref.noise_sgd_step_ref(acc, noise, p, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("n,block", [(100, 65536), (1000, 256)])
+def test_noise_adam_step(n, block):
+    k = jax.random.PRNGKey(1)
+    acc = jax.random.normal(k, (n,))
+    noise = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    p = jax.random.normal(jax.random.fold_in(k, 2), (n,))
+    m = jax.random.normal(jax.random.fold_in(k, 3), (n,)) * 0.1
+    v = jax.random.uniform(jax.random.fold_in(k, 4), (n,), maxval=0.01)
+    kw = dict(stddev=1.0, n_units=16, lr=1e-3, weight_decay=1e-4,
+              b1=0.9, b2=0.999, eps=1e-8, c1=1.0 - 0.9 ** 3,
+              c2=1.0 - 0.999 ** 3)
+    got = noise_adam_step(acc, noise, p, m, v, block=block, interpret=True,
+                          **kw)
+    want = ref.noise_adam_step_ref(acc, noise, p, m, v, **kw)
+    for g, wnt in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wnt),
+                                   **TOL[jnp.float32])
+
+
+def test_dp_adam_update_matches_plain_chain():
+    """End-to-end fused DP update (clip scan → _flat_gaussian_like noise →
+    noise_adam_step) vs the reference dp_gradient + Adam.update chain on a
+    real parameter tree: same key, same batch — the Gaussian draws are
+    IDENTICAL by construction (same per-leaf split schedule), so the only
+    difference is kernel arithmetic order. This is the kernel-level twin
+    of the pallas-* conformance cases."""
+    from repro.core.dp import dp_adam_update, dp_gradient
+    from repro.optim import Adam
+
+    k = jax.random.PRNGKey(7)
+    params = {"w": jax.random.normal(k, (49, 10)) * 0.1,
+              "b": jnp.zeros((10,))}
+    opt = Adam(lr=1e-3, weight_decay=1e-4)
+    opt_state = opt.init(params)
+    x = jax.random.normal(jax.random.fold_in(k, 1), (8, 49))
+    y = jax.random.randint(jax.random.fold_in(k, 2), (8,), 0, 10)
+
+    def loss(p, batch):
+        xb, yb = batch
+        logits = xb @ p["w"] + p["b"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        return jnp.mean(lse - logits[jnp.arange(xb.shape[0]), yb])
+
+    key = jax.random.PRNGKey(42)
+    p2, o2, m2 = dp_adam_update(loss, params, opt_state, (x, y), key,
+                                opt=opt, clip_norm=1.0,
+                                noise_multiplier=1.0, interpret=True)
+    g, m_ref_ = dp_gradient(loss, params, (x, y), key, clip_norm=1.0,
+                            noise_multiplier=1.0)
+    p2_ref, o2_ref = opt.update(g, opt_state, params)
+    for a, b in zip(jax.tree_util.tree_leaves(p2),
+                    jax.tree_util.tree_leaves(p2_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m2["loss"]), float(m_ref_["loss"]),
+                               rtol=1e-5)
+    assert int(o2.t) == int(o2_ref.t) == 1
