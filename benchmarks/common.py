@@ -127,7 +127,8 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   backend: str = None, dropout_rate: float = 0.0,
                   rounds_per_block: int = 0, staleness: int = 0,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
-                  resume: bool = None, use_pallas: bool = None
+                  resume: bool = None, use_pallas: bool = None,
+                  compress: str = None, compress_ratio: float = None
                   ) -> List[Dict]:
     """``backend`` selects the FederationEngine execution path for every
     figure run ("auto" -> one compiled vmap round program on these
@@ -148,7 +149,12 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     ``REPRO_BENCH_CKPT_DIR``, ``REPRO_BENCH_CKPT_EVERY``,
     ``REPRO_BENCH_RESUME``. ``use_pallas`` (env ``REPRO_BENCH_PALLAS``)
     runs every figure on the Pallas-fused round hot path — fused gossip
-    mix + DP clip→noise→step; allclose to the plain-XLA reference."""
+    mix + DP clip→noise→step; allclose to the plain-XLA reference.
+    ``compress`` / ``compress_ratio`` (envs ``REPRO_BENCH_COMPRESS``,
+    ``REPRO_BENCH_COMPRESS_RATIO``) run every exchange through the
+    compressed gossip protocol with error feedback ("none" | "topk" |
+    "int8"; see repro.core.compress) — accuracy-vs-bytes tradeoffs are
+    measured by ``benchmarks/fig_compress.py``."""
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
     rounds_per_block = rounds_per_block or _env_int("REPRO_BENCH_BLOCK") or 1
     staleness = staleness or _env_int("REPRO_BENCH_STALENESS")
@@ -165,6 +171,16 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
         resume = _env_flag("REPRO_BENCH_RESUME")
     if use_pallas is None:
         use_pallas = _env_flag("REPRO_BENCH_PALLAS")
+    compress = compress or os.environ.get("REPRO_BENCH_COMPRESS", "").strip() \
+        or None
+    if compress_ratio is None:
+        raw = os.environ.get("REPRO_BENCH_COMPRESS_RATIO", "").strip()
+        if raw:
+            try:
+                compress_ratio = float(raw)
+            except ValueError:
+                raise SystemExit("REPRO_BENCH_COMPRESS_RATIO must be a "
+                                 f"float, got {raw!r}")
     rows = []
     for method in methods:
         # proxy accuracies accumulate across seeds exactly like ``accs``
@@ -194,7 +210,8 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 rounds_per_block=rounds_per_block,
                 checkpoint_dir=(os.path.join(checkpoint_dir, dataset)
                                 if checkpoint_dir else None),
-                checkpoint_every=checkpoint_every, resume=resume)
+                checkpoint_every=checkpoint_every, resume=resume,
+                compress=compress, compress_ratio=compress_ratio)
             row = res["history"][-1]
             which = "private_acc" if "private_acc" in row else "acc"
             accs.extend(row[which])

@@ -1,51 +1,111 @@
-"""Paper Fig. 4 / Fig. 13: communication time per round as the federation
-grows. Centralized schemes (FedAvg, FML) serialize at the server → O(K);
+"""Paper Fig. 4 / Fig. 13: communication per round — method x compression.
+Centralized schemes (FedAvg, FML) serialize at the server → O(K);
 decentralized PushSum sends exactly one model per client → O(1). We report
 the analytic link model (bytes / 50 GB/s ICI-class links) over the REAL
 serialized sizes of the models used in the paper reproduction, plus the
-LLM-scale proxies used in the multi-pod path."""
+LLM-scale proxies used in the multi-pod path — now crossed with the
+compressed-exchange wire formats of ``repro.core.compress``: every row
+carries the MEASURED bytes-on-wire of one transmission (the top-k payload
+is the observed nonzero count of a real encode on the actual flat
+parameter vector, not just the analytic formula) so the O(1)-per-client
+claim is checked on what actually ships. Rows are also written as JSON
+(``REPRO_BENCH_COMM_JSON``, default ``fig4_comm.json`` in the CWD) for
+``scripts/check_comm_claim.py``, the CI gate that fails if ProxyFL's
+per-client bytes/round ever grows with K."""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.registry import proxy_of
+from repro.core.compress import (CompressionSpec, encode_decode, topk_k,
+                                 wire_bytes)
 from repro.core.gossip import comm_cost_per_round
-from repro.core.protocol import ModelSpec
-from repro.nn.modules import tree_bytes
+from repro.nn.modules import tree_bytes, tree_flatten_vector
 from repro.nn.vision import get_vision_model
 
 from .common import FULL
 
 METHODS = ("proxyfl", "fml", "avgpush", "fedavg", "cwt")
+COMPRESS = ("none", "topk", "int8")
+RATIO = 0.25  # top-k kept fraction — fig_compress.py sweeps accuracy at it
+
+
+def _measured_wire_bytes(flat: np.ndarray, mode: str,
+                         ratio: float = RATIO) -> int:
+    """Bytes ONE client puts on the wire for one message, measured by
+    running the codec on a real flat parameter vector: top-k's payload is
+    the observed nonzero count of the decoded transmission (position
+    bitmap + 2 bytes per bf16 value — entries that round to bf16 zero cost
+    their bitmap bit but ship no value); int8 and none are structural
+    (payload size is fixed by construction, independent of the values)."""
+    D = int(flat.shape[0])
+    if mode == "topk":
+        spec = CompressionSpec(mode="topk", ratio=ratio)
+        c = encode_decode(jnp.asarray(flat, jnp.float32)[None, :],
+                          jax.random.PRNGKey(0), spec)
+        nnz = int(np.count_nonzero(np.asarray(c)))
+        assert nnz <= topk_k(D, ratio), (nnz, topk_k(D, ratio))
+        return (D + 7) // 8 + 2 * nnz
+    return wire_bytes(mode, D, ratio)
+
+
+def _rows_for(scale: str, clients, model_wire, proxy_wire, pb, xb,
+              dtype_bytes: int):
+    """One row per (K, method, compression mode): compression applies to
+    whatever the method gossips — bytes_per_round is the serialized
+    traffic at the bottleneck node (server for FedAvg/FML, any single
+    client for the decentralized schemes)."""
+    rows = []
+    for K in clients:
+        for m in METHODS:
+            for cm in COMPRESS:
+                mbw, xbw = model_wire[cm], proxy_wire[cm]
+                rows.append({
+                    "scale": scale, "clients": K, "method": m,
+                    "compress": cm, "dtype_bytes": dtype_bytes,
+                    "model_bytes": pb, "proxy_bytes": xb,
+                    "wire_model_bytes": mbw, "wire_proxy_bytes": xbw,
+                    "bytes_per_round": int(comm_cost_per_round(
+                        m, K, mbw, xbw, link_bandwidth=1.0)),
+                    "comm_s_per_round": comm_cost_per_round(m, K, mbw, xbw),
+                })
+    return rows
 
 
 def run(full: bool = FULL):
-    rows = []
-    # paper-scale: LeNet5 private / MLP proxy on MNIST geometry
+    # paper-scale: LeNet5 private / MLP proxy on MNIST geometry — wire
+    # bytes MEASURED on the real initialized flats
     vm_priv = get_vision_model("lenet5")
     vm_prox = get_vision_model("mlp")
-    pb = tree_bytes(vm_priv.init(jax.random.PRNGKey(0), (28, 28, 1), 10))
-    xb = tree_bytes(vm_prox.init(jax.random.PRNGKey(0), (28, 28, 1), 10))
-    for K in (4, 8, 16, 32, 64, 128) if full else (4, 8, 32, 128):
-        for m in METHODS:
-            rows.append({
-                "scale": "paper(lenet5/mlp)", "clients": K, "method": m,
-                "model_bytes": pb, "proxy_bytes": xb,
-                "comm_s_per_round": comm_cost_per_round(m, K, pb, xb),
-            })
+    priv_p = vm_priv.init(jax.random.PRNGKey(0), (28, 28, 1), 10)
+    prox_p = vm_prox.init(jax.random.PRNGKey(1), (28, 28, 1), 10)
+    priv_flat = np.asarray(tree_flatten_vector(priv_p))
+    prox_flat = np.asarray(tree_flatten_vector(prox_p))
+    rows = _rows_for(
+        "paper(lenet5/mlp)",
+        (4, 8, 16, 32, 64, 128) if full else (4, 8, 32, 128),
+        {cm: _measured_wire_bytes(priv_flat, cm) for cm in COMPRESS},
+        {cm: _measured_wire_bytes(prox_flat, cm) for cm in COMPRESS},
+        tree_bytes(priv_p), tree_bytes(prox_p), dtype_bytes=4)
     # LLM-scale: the common proxy of the assigned archs (what actually
-    # crosses the wire in the multi-pod ProxyFL deployment)
+    # crosses the wire in the multi-pod ProxyFL deployment) — analytic
+    # param counts, bf16 full-precision baseline
     cfg = get_config("qwen2-7b")
     proxy = proxy_of(cfg)
-    priv_b = cfg.param_counts()["total"] * 2        # bf16
-    prox_b = proxy.param_counts()["total"] * 2
-    for K in (8, 64, 512):
-        for m in METHODS:
-            rows.append({
-                "scale": "llm(qwen2-7b/proxy)", "clients": K, "method": m,
-                "model_bytes": priv_b, "proxy_bytes": prox_b,
-                "comm_s_per_round": comm_cost_per_round(m, K, priv_b, prox_b),
-            })
+    Dp = cfg.param_counts()["total"]
+    Dx = proxy.param_counts()["total"]
+    rows += _rows_for(
+        "llm(qwen2-7b/proxy)", (8, 64, 512),
+        {cm: wire_bytes(cm, Dp, RATIO, dtype_bytes=2) for cm in COMPRESS},
+        {cm: wire_bytes(cm, Dx, RATIO, dtype_bytes=2) for cm in COMPRESS},
+        Dp * 2, Dx * 2, dtype_bytes=2)
+    path = os.environ.get("REPRO_BENCH_COMM_JSON", "fig4_comm.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
     return rows

@@ -14,8 +14,9 @@ import sys
 import time
 
 from . import (fig3_accuracy, fig4_comm, fig5_ablations, fig6_kvasir,
-               fig11_batchsize, fig_async, fig_blocks, fig_dropout,
-               fig_kernels, fig_ragged, mia_privacy, roofline, table2_histo)
+               fig11_batchsize, fig_async, fig_blocks, fig_compress,
+               fig_dropout, fig_kernels, fig_ragged, mia_privacy, roofline,
+               table2_histo)
 
 # name -> (module, paper anchor). The one-line description shown by
 # ``--list`` is each module's own docstring first line, so registry and
@@ -30,6 +31,7 @@ MODULES = {
     "fig_ragged": (fig_ragged, "beyond-paper"),
     "fig_blocks": (fig_blocks, "beyond-paper"),
     "fig_kernels": (fig_kernels, "beyond-paper"),
+    "fig_compress": (fig_compress, "beyond-paper"),
     "fig_async": (fig_async, "beyond-paper"),
     "fig_dropout": (fig_dropout, "paper §3.4"),
     "mia_privacy": (mia_privacy, "beyond-paper"),

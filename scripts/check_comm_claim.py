@@ -1,0 +1,117 @@
+"""Communication-claim gate (run by the ``comm-claim`` CI job).
+
+The paper's headline systems claim (§4, Fig. 4) is that ProxyFL's
+communication is O(1) in federation size: every client sends exactly one
+proxy per round, no matter how many clients join. The compressed exchange
+(repro.core.compress) must shrink that constant, never disturb it. This
+script loads the JSON written by ``benchmarks/fig4_comm.py`` (and, when
+present, ``benchmarks/fig_compress.py``) and FAILS the build if:
+
+1. ProxyFL's bottleneck bytes/round varies with K — for ANY compression
+   mode, at every scale in the file (the O(1) claim itself);
+2. a centralized baseline (FedAvg/FML) does NOT grow with K — that would
+   mean the figure stopped measuring the contrast the paper draws;
+3. top-k at ratio 0.25 reduces ProxyFL's bytes/round by < 4x, or int8
+   by < 3.5x, versus an f32 full-precision baseline (the compression
+   claim); scales whose baseline already ships bf16 (the LLM-scale rows,
+   ``dtype_bytes == 2``) use the correspondingly halved structural
+   floors — 3x top-k, 1.9x int8;
+4. (fig_compress.json, full 20-round grids only) ProxyFL's top-k proxy
+   accuracy falls more than 2 points below the uncompressed run at the
+   claim cohorts (K <= 8 — the paper's experiments run 8 clients). The
+   K=16 row is the scaling stress point and is reported, not gated:
+   6.4x fewer bits at the slowest-mixing cohort buys a measured ~4-round
+   consensus delay (the gap closes fully by 24 rounds), which is the
+   honest Pareto trade the figure exists to show. Tiny CI slices
+   (REPRO_BENCH_COMPRESS_TINY) skip the accuracy check entirely: 2
+   rounds of a 5%% cohort is noise, and the point of the tiny slice is
+   exercising the codecs, not the learning curve.
+
+    PYTHONPATH=src python scripts/check_comm_claim.py \
+        [fig4_comm.json] [fig_compress.json]
+"""
+import json
+import sys
+
+
+def _fail(msg: str):
+    print(f"COMM CLAIM VIOLATED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def _by(rows, **kv):
+    return [r for r in rows if all(r.get(k) == v for k, v in kv.items())]
+
+
+def check_fig4(rows):
+    scales = sorted({r["scale"] for r in rows})
+    modes = sorted({r["compress"] for r in rows})
+    for scale in scales:
+        # 1. O(1): proxyfl bytes/round must be ONE value across K
+        for mode in modes:
+            got = {r["clients"]: r["bytes_per_round"]
+                   for r in _by(rows, scale=scale, method="proxyfl",
+                                compress=mode)}
+            if len(set(got.values())) != 1:
+                _fail(f"proxyfl bytes/round varies with K at {scale} "
+                      f"compress={mode}: {got}")
+        # 2. contrast: the centralized baselines must grow with K
+        for method in ("fedavg", "fml"):
+            sel = sorted((r["clients"], r["bytes_per_round"])
+                         for r in _by(rows, scale=scale, method=method,
+                                      compress="none"))
+            if any(b2 <= b1 for (_, b1), (_, b2) in zip(sel, sel[1:])):
+                _fail(f"{method} bytes/round is not increasing in K at "
+                      f"{scale}: {sel}")
+        # 3. compression factors on what proxyfl ships — floors depend on
+        # the baseline element width (f32 rows: 6.4x/4x structural bests;
+        # bf16 rows: 3.2x/2x)
+        base = _by(rows, scale=scale, method="proxyfl", compress="none")[0]
+        f32 = base.get("dtype_bytes", 4) == 4
+        for mode, floor in (("topk", 4.0 if f32 else 3.0),
+                            ("int8", 3.5 if f32 else 1.9)):
+            b = _by(rows, scale=scale, method="proxyfl", compress=mode)[0]
+            red = base["bytes_per_round"] / b["bytes_per_round"]
+            if red < floor:
+                _fail(f"{mode} reduction {red:.2f}x < {floor}x at {scale}")
+            print(f"ok {scale}: {mode} {red:.2f}x, proxyfl O(1) in K")
+
+
+def check_fig_compress(rows):
+    full_grid = all(r["rounds"] >= 20 for r in rows)
+    for K in sorted({r["clients"] for r in rows}):
+        none = _by(rows, clients=K, method="proxyfl", compress="none")[0]
+        topk = _by(rows, clients=K, method="proxyfl", compress="topk")[0]
+        red = none["client_bytes_per_round"] / topk["client_bytes_per_round"]
+        if red < 4.0:
+            _fail(f"fig_compress K={K}: topk reduction {red:.2f}x < 4x")
+        if not full_grid:
+            print(f"ok K={K}: topk {red:.2f}x (tiny slice — accuracy "
+                  "gap not asserted)")
+            continue
+        gap = none["proxy_acc_mean"] - topk["proxy_acc_mean"]
+        if K <= 8 and gap > 0.02:
+            _fail(f"fig_compress K={K}: topk proxy accuracy "
+                  f"{topk['proxy_acc_mean']:.4f} is {gap * 100:.1f} points "
+                  f"below uncompressed {none['proxy_acc_mean']:.4f} (> 2)")
+        note = "" if K <= 8 else " (stress row — reported, not gated)"
+        print(f"ok K={K}: topk {red:.2f}x, proxy acc gap "
+              f"{gap * 100:+.1f} points{note}")
+
+
+def main(argv):
+    fig4 = argv[1] if len(argv) > 1 else "fig4_comm.json"
+    figc = argv[2] if len(argv) > 2 else "fig_compress.json"
+    check_fig4(json.load(open(fig4)))
+    try:
+        rows = json.load(open(figc))
+    except FileNotFoundError:
+        print(f"note: {figc} absent — accuracy-vs-bytes checks skipped")
+        rows = None
+    if rows:
+        check_fig_compress(rows)
+    print("COMM CLAIM OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

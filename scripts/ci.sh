@@ -7,8 +7,15 @@
 #                             # conformance matrix (tests/test_conformance.py:
 #                             # loop==vmap, ragged-on-vmap, blocked==per-round
 #                             # bitwise, the async-τ0==vmap equivalence smoke,
-#                             # async-τ2 block/resume bit-identity, and the
-#                             # Pallas fused-vs-plain hot-path parity) plus
+#                             # async-τ2 block/resume bit-identity, the
+#                             # Pallas fused-vs-plain hot-path parity, and
+#                             # the compressed-exchange parity slice:
+#                             # compress=none bitwise-identical to the
+#                             # uncompressed protocol on every backend,
+#                             # plus topk/int8 loop-vs-vmap columns with
+#                             # the privacy epsilon compared EXACTLY —
+#                             # compression must never touch the
+#                             # accountant) plus
 #                             # the interpret-mode kernel smoke slice
 #                             # (tests/test_kernels.py: fused PushSum mix,
 #                             # stale mix, noise→SGD/Adam step vs the ref
@@ -22,7 +29,11 @@
 #   scripts/ci.sh --shard I/N # deterministic 1-based slice of the test FILES
 #                             # (sorted, round-robin) — the GitHub workflow
 #                             # matrixes the full suite across shards; the
-#                             # quickstart example runs on shard 1 only
+#                             # quickstart example runs on shard 1 only and
+#                             # the heterogeneous-archs example on shard 2
+#                             # (shards 1 and 2 always exist: CI's smallest
+#                             # matrix is 3-way), so every example executes
+#                             # exactly once per matrixed run
 #
 # The full suite exceeds 10 minutes serial, so pytest runs with `-n auto`
 # whenever pytest-xdist is importable and falls back to serial when it is
@@ -88,6 +99,12 @@ if [[ -n "$SHARD" ]]; then
   if [[ "$I" == "1" ]]; then
     echo "== example: quickstart (headless) =="
     python examples/quickstart.py
+  elif [[ "$I" == "2" ]]; then
+    # quickstart runs on shard 1; without this branch no shard ever
+    # executed the heterogeneous-archs example and a regression there
+    # would only surface in local full runs
+    echo "== example: heterogeneous archs (headless) =="
+    python examples/heterogeneous_archs.py
   fi
   echo "CI OK"
   exit 0

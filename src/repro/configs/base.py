@@ -254,3 +254,18 @@ class ProxyFLConfig:
     # order), pinned by the use_pallas columns of tests/test_conformance.py.
     # Off by default: plain XLA remains the reference semantics.
     use_pallas: bool = False
+    # Compressed proxy exchange (repro.core.compress): what each client's
+    # transmitted proxy looks like on the wire. "none" keeps the exchange
+    # byte-for-byte the full-precision protocol; "topk" keeps the
+    # compress_ratio·D largest-magnitude entries (bf16 values + position
+    # bitmap on the wire, ~6.4x fewer bytes at ratio 0.25); "int8" ships
+    # stochastically-rounded 8-bit values with one f32 scale per client
+    # (~4x). What goes on the wire is a compressed DELTA against a
+    # public copy of the proxy every receiver holds (carried per client
+    # in the engine state; receivers mix the dense updated copy), so
+    # truncated mass stays in the implicit residual and is re-sent later
+    # — compression delays information instead of destroying it. Composes
+    # with loop/vmap/blocked/async-τ>0; shard_map rejects it, and
+    # use_pallas falls back to the plain-XLA exchange while compressing.
+    compress: str = "none"  # "none" | "topk" | "int8"
+    compress_ratio: float = 0.25  # top-k kept fraction of D

@@ -182,6 +182,8 @@ def run_federated(
     checkpoint_every: int = 0,
     resume: bool = False,
     use_pallas: Optional[bool] = None,
+    compress: Optional[str] = None,
+    compress_ratio: Optional[float] = None,
 ) -> Dict:
     """Run ``cfg.rounds`` rounds of ``method``; return history + final state.
 
@@ -207,10 +209,22 @@ def run_federated(
     the Pallas-fused round hot path — fused PushSum exchange + fused DP
     clip→noise→step; allclose to the plain-XLA reference, see
     ``repro.core.engine`` ("Fused hot path").
+
+    ``compress``/``compress_ratio`` override ``cfg.compress``/
+    ``cfg.compress_ratio`` (None keeps the config): the compressed proxy
+    exchange with error feedback — ``"none"`` | ``"topk"`` | ``"int8"``,
+    see ``repro.core.compress`` and the "Compressed proxy exchange"
+    section of ``repro.core.engine``. Applies to whatever the method
+    gossips (proxies for ProxyFL/FML, the full model for FedAvg/AvgPush/
+    CWT); no-exchange methods (Regular/Joint) ignore it.
     """
     assert method in METHODS, method
     if use_pallas is not None:
         cfg = dataclasses.replace(cfg, use_pallas=use_pallas)
+    if compress is not None:
+        cfg = dataclasses.replace(cfg, compress=compress)
+    if compress_ratio is not None:
+        cfg = dataclasses.replace(cfg, compress_ratio=float(compress_ratio))
     K = len(client_data)
     key = jax.random.PRNGKey(seed)
     xt, yt = test_data

@@ -168,6 +168,38 @@ parity (params AND epsilon) per backend, and ``benchmarks/fig_kernels.py``
 measures the rounds/sec and bytes-moved-per-round effect. shard_map keeps
 its ppermute collective exchange regardless of the flag.
 
+Compressed proxy exchange (error feedback)
+------------------------------------------
+``ProxyFLConfig.compress`` ∈ {"none", "topk", "int8"} (plus
+``compress_ratio`` for top-k) routes every matmul-mix exchange through
+``repro.core.compress``: the off-diagonal transmissions — and ONLY those;
+a client's kept mass never crosses the wire — are sparsified/quantized,
+and each client carries its codec state — the PUBLIC COPY ``ẑ_k`` [D]
+every receiver already holds — in the ENGINE state (the same carried-
+state pattern as the async τ-buffer: a federation-level ``{"clients",
+"ef_state"}`` wrapper, never inside the per-client trees a step_fn could
+drop). The wire carries compressed DELTAS against that copy
+(CHOCO-SGD-style): ``c_k = C(m_k − ẑ_k)``, ``ẑ'_k = ẑ_k + c_k``, and
+receivers mix the DENSE ``ẑ'_k`` — so sparsification never zero-fills a
+coordinate on the receiver and the de-bias denominator stays exact. The
+error-feedback residual is implicit (``m_k − ẑ'_k``): per transmitting
+client per round ``c_k + (m_k − ẑ'_k) == m_k − ẑ_k`` exactly in f32, so
+truncated mass is DELAYED into later rounds, never destroyed; clients
+that send nothing (§3.4 dropouts, no-exchange rounds) keep their public
+copy untouched. The copies warm-start at the initial proxies (one
+uncompressed setup broadcast). The codec state rides the block-scan
+carry (any block size replays bit-identically), travels through
+``_ckpt_payload``/``restore_state`` (kill/
+resume is bit-identical; config fingerprints refuse a compression-config
+mismatch), and de-bias weights are never compressed, so PushSum w-mass
+conservation is exact at any τ. ``compress="none"`` keeps every round
+program byte-for-byte the uncompressed one (enforced bitwise by
+tests/test_conformance.py). Compression composes with loop/vmap/blocked/
+async-τ>0; shard_map's ppermute exchange is uncompressed-only (rejected
+at construction), and ``use_pallas`` falls back to the plain-XLA path for
+the exchange while compressing (the fused kernels implement the
+uncompressed chain — see ``repro.core.compress``).
+
 Typical usage::
 
     engine = dml_engine((spec,) * K, proxy_spec, cfg)   # backend="auto"
@@ -201,6 +233,7 @@ from ..configs.base import ProxyFLConfig
 from ..data.ragged import pad_compatible, pad_stack
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
+from .compress import compress_round_key, compress_spec
 from .gossip import (gossip_shift, mix_matrix, mix_schedule,
                      pushsum_gossip_shard, pushsum_mix_debiased,
                      shard_map_fn, shift_schedule, stale_mix_apply,
@@ -398,7 +431,25 @@ class FederationEngine:
         # staleness=0 is synchronous delivery: the async backend then runs
         # the vmap round programs verbatim on UNWRAPPED state (no buffer),
         # which is what makes τ=0 bit-identical to backend="vmap"
-        self._wrapped = backend == "async" and self.staleness > 0
+        self._stale = backend == "async" and self.staleness > 0
+        # compressed proxy exchange (cfg.compress): None keeps every round
+        # program byte-for-byte the uncompressed one; a spec adds each
+        # client's codec state (the public copy receivers mix) to the
+        # engine state and routes the matmul exchanges through
+        # repro.core.compress
+        self.compress = compress_spec(cfg)
+        if self.compress is not None and backend == "shard_map":
+            raise ValueError(
+                "compressed gossip (cfg.compress != 'none') is not "
+                "implemented for the shard_map ppermute exchange — the "
+                "collective ships full-precision tensors; use the loop/"
+                "vmap/async backends for compressed rounds")
+        self._compressed = (self.compress is not None
+                            and mix != "none" and n_clients > 1)
+        # a federation-level state wrapper {"clients": ..., [stale buffer,]
+        # [codec public copies]} carries cross-round exchange state NEXT TO
+        # the clients — per-client step_fns must never see (and drop) it
+        self._wrapped = self._stale or self._compressed
         self.backend = backend
         # Pallas-fused exchange (cfg.use_pallas): the matmul-mix backends
         # route through the fused blocked kernels in repro.kernels —
@@ -420,44 +471,61 @@ class FederationEngine:
     # -- state construction / access ---------------------------------------
 
     def _clients_of(self, state):
-        """The stacked per-client state tree. For the stale async backend
-        (τ>0) the engine state is a federation-level wrapper ``{"clients":
-        <stacked tree>, "stale_theta": [τ, K, D], "stale_w": [τ, K]}`` —
-        the in-flight gossip buffer rides next to the clients, never inside
-        them (per-client step_fns must not see or drop it)."""
+        """The per-client state tree (stacked pytree, or a list on the loop
+        backend). For the stale async backend (τ>0) and for compressed
+        exchanges the engine state is a federation-level wrapper
+        ``{"clients": <stacked tree | list>, ["stale_theta": [τ, K, D],
+        "stale_w": [τ, K],] ["ef_state": [K, D]]}`` — the in-flight gossip
+        buffer and the codec's public copies ride next to the clients,
+        never inside them (per-client step_fns must not see or drop
+        them)."""
         return state["clients"] if self._wrapped else state
 
     def init_states(self, key) -> Any:
         """Per-client init at fold_in(key, k) — identical across backends.
         The stale async backend additionally allocates the empty τ-deep
         in-flight buffer (cold start: nothing arrives for τ rounds and the
-        de-bias weights account for the mass in flight)."""
+        de-bias weights account for the mass in flight); compressed
+        exchanges WARM-START the public copies at the initial proxies
+        (f32 [K, D] — accumulator precision regardless of the proxy
+        dtype): one uncompressed broadcast at setup, after which every
+        round's wire carries only the compressed delta — without it the
+        copies need ≈1/ratio rounds to even cover the coordinates and
+        the top-k proxies measurably lag at short horizons."""
         states = [self.init_fns[k](jax.random.fold_in(key, k))
                   for k in range(self.K)]
-        if self.backend == "loop":
-            return states
-        stacked = stack_states(states)
+        base: Any = (states if self.backend == "loop"
+                     else stack_states(states))
         if not self._wrapped:
-            return stacked
+            return base
+        state: Dict[str, Any] = {"clients": base}
         flat0 = tree_flatten_vector(states[0]["proxy"]["params"])
-        return {"clients": stacked,
-                "stale_theta": jnp.zeros(
-                    (self.staleness, self.K, flat0.shape[0]), flat0.dtype),
-                "stale_w": jnp.zeros((self.staleness, self.K),
-                                     jnp.result_type(states[0]["w"]))}
+        if self._stale:
+            state["stale_theta"] = jnp.zeros(
+                (self.staleness, self.K, flat0.shape[0]), flat0.dtype)
+            state["stale_w"] = jnp.zeros(
+                (self.staleness, self.K),
+                jnp.result_type(states[0]["w"]))
+        if self._compressed:
+            state["ef_state"] = jnp.stack(
+                [tree_flatten_vector(s["proxy"]["params"])
+                 for s in states]).astype(jnp.float32)
+        return state
 
     def export_states(self, state) -> List[Dict]:
-        if self.backend == "loop":
-            return list(state)
         clients = self._clients_of(state)
+        if self.backend == "loop":
+            return list(clients)
         return [unstack_state(clients, k) for k in range(self.K)]
 
     def client_state(self, state, k: int) -> Dict:
-        return (state[k] if self.backend == "loop"
-                else unstack_state(self._clients_of(state), k))
+        clients = self._clients_of(state)
+        return (clients[k] if self.backend == "loop"
+                else unstack_state(clients, k))
 
     def client_params(self, state, k: int, role: str = "proxy"):
-        s = state[k] if self.backend == "loop" else self._clients_of(state)
+        clients = self._clients_of(state)
+        s = clients[k] if self.backend == "loop" else clients
         p = s[role]["params"]
         return p if self.backend == "loop" else jax.tree_util.tree_map(
             lambda x: x[k], p)
@@ -470,7 +538,7 @@ class FederationEngine:
         cannot be batched — callers fall back to per-client evaluation)."""
         if self.backend != "loop":
             return self._clients_of(state)[role]["params"]
-        trees = [s[role]["params"] for s in state]
+        trees = [s[role]["params"] for s in self._clients_of(state)]
         structs = {jax.tree_util.tree_structure(tr) for tr in trees}
         shapes = {tuple((x.shape, jnp.result_type(x))
                         for x in jax.tree_util.tree_leaves(tr))
@@ -503,13 +571,21 @@ class FederationEngine:
                    # explicit flag: PRNGKey(0)'s key data is all zeros, so
                    # the key words alone cannot mean "no key recorded"
                    "base_key_set": np.asarray(base_key is not None, np.uint8)}
-        if self._wrapped:
+        if self._stale:
             # the in-flight gossip buffer is federation state: rounds
             # t+1..t+τ deliver sends recorded here, so a resume without it
             # could not replay the trajectory (a τ-mismatched or sync
             # checkpoint fails the key/shape match with a descriptive error)
             payload["stale_theta"] = state["stale_theta"]
             payload["stale_w"] = state["stale_w"]
+        if self._compressed:
+            # the codec's public copies are federation state for the same
+            # reason: round t+1's transmission is C(m − ef_state) and the
+            # receivers mix ef_state itself, so a resume without it (or
+            # across a compression-config change — also refused by
+            # FederationCheckpointer's config fingerprint) could not
+            # replay the trajectory bit-identically
+            payload["compress_ef_state"] = state["ef_state"]
         return payload
 
     def save_state(self, path: str, state, t: int, base_key=None) -> str:
@@ -531,14 +607,17 @@ class FederationEngine:
             like = self.init_states(jax.random.PRNGKey(0))
         loaded = load_checkpoint(path, self._ckpt_payload(like, 0, None))
         clients = [loaded["clients"][f"c{k:04d}"] for k in range(self.K)]
-        if self.backend == "loop":
-            state: Any = clients
-        elif self._wrapped:
-            state = {"clients": stack_states(clients),
-                     "stale_theta": loaded["stale_theta"],
-                     "stale_w": loaded["stale_w"]}
+        base: Any = (clients if self.backend == "loop"
+                     else stack_states(clients))
+        if self._wrapped:
+            state: Any = {"clients": base}
+            if self._stale:
+                state["stale_theta"] = loaded["stale_theta"]
+                state["stale_w"] = loaded["stale_w"]
+            if self._compressed:
+                state["ef_state"] = loaded["compress_ef_state"]
         else:
-            state = stack_states(clients)
+            state = base
         rounds_done = int(loaded["rounds_done"])
         steps = np.asarray(loaded["accountant_steps"])
         for k, acc in enumerate(self.accountants):
@@ -579,7 +658,7 @@ class FederationEngine:
             assert act.shape == (self.K,)
         if self.backend == "loop":
             state, metrics = self._round_loop(state, data, t, key, act)
-        elif self._wrapped:
+        elif self._stale:
             state, metrics = self._round_stale(state, data, t, key, act)
         else:
             state, metrics = self._round_stacked(state, data, t, key, act)
@@ -637,7 +716,7 @@ class FederationEngine:
                 state, m = self.run_round(state, data, t, round_key(key, t))
                 rows.append(m)
             return state, _stack_metric_rows(rows, self.K)
-        block = self._rounds_block_stale if self._wrapped else \
+        block = self._rounds_block_stale if self._stale else \
             self._rounds_block
         return block(state, data, t0, n_rounds, key,
                      active_schedule(t0, n_rounds, self.K, self.cfg))
@@ -687,9 +766,17 @@ class FederationEngine:
                 self._rounds[rkey] = self._build_block(
                     T, n_steps, mix_ops, step_masked, pass_nv)
         ts = jnp.arange(t0, t0 + T, dtype=jnp.int32)
-        state, ms = self._rounds[rkey](
-            state, data_s, n_valid, steps_dev, Ps, jnp.asarray(act_stack),
-            ts, key)
+        if self._compressed and mixing:
+            clients, ef_state, ms = self._rounds[rkey](
+                self._clients_of(state), state["ef_state"], data_s, n_valid,
+                steps_dev, Ps, jnp.asarray(act_stack), ts, key)
+            state = {"clients": clients, "ef_state": ef_state}
+        else:
+            clients, ms = self._rounds[rkey](
+                self._clients_of(state), data_s, n_valid, steps_dev, Ps,
+                jnp.asarray(act_stack), ts, key)
+            state = ({"clients": clients, "ef_state": state["ef_state"]}
+                     if self._compressed else clients)
         return state, self._finish_block(ms, act_stack, data)
 
     # -- loop backend --------------------------------------------------------
@@ -723,8 +810,9 @@ class FederationEngine:
             cached = self._loop_steps[id(step_fn)] = jax.jit(one)
         return cached
 
-    def _round_loop(self, states, data, t, key, act):
-        states = list(states)  # same no-aliasing contract as the stacked backends
+    def _round_loop(self, state, data, t, key, act):
+        ef_state = state["ef_state"] if self._compressed else None
+        states = list(self._clients_of(state))  # same no-aliasing contract
         per_client: List[Optional[Dict]] = [None] * self.K
         for k in range(self.K):
             if act is not None and not act[k]:
@@ -742,8 +830,17 @@ class FederationEngine:
             flat = jnp.stack([tree_flatten_vector(s["proxy"]["params"])
                               for s in states])
             w = jnp.asarray([jnp.asarray(s["w"]) for s in states], flat.dtype)
-            unb, w2 = pushsum_mix_debiased(flat, w, P,
-                                           use_pallas=self.use_pallas)
+            if self._compressed:
+                # same compressed exchange — and the same codec RNG key
+                # derivation — as the stacked round programs, so loop stays
+                # the heterogeneous-capable reference of the compressed path
+                unb, w2, ef_state = pushsum_mix_debiased(
+                    flat, w, P, use_pallas=self.use_pallas,
+                    compress=self.compress, ef_state=ef_state,
+                    key=compress_round_key(key))
+            else:
+                unb, w2 = pushsum_mix_debiased(flat, w, P,
+                                               use_pallas=self.use_pallas)
             like = states[0]["proxy"]["params"]
             for k in range(self.K):
                 states[k] = dict(states[k])
@@ -757,6 +854,8 @@ class FederationEngine:
         metrics = {kk: np.asarray([float(m[kk]) if m is not None and kk in m
                                    else np.nan for m in per_client])
                    for kk in sorted(keys)}
+        if self._compressed:
+            return {"clients": states, "ef_state": ef_state}, metrics
         return states, metrics
 
     # -- vmap / shard_map backends ------------------------------------------
@@ -892,23 +991,49 @@ class FederationEngine:
         (vmap — P is a runtime arg, so every round reuses one compilation;
         plain matmuls or the Pallas-fused kernel per ``cfg.use_pallas``)
         or a ppermute collective (shard_map — the schedule is baked in, P
-        is unused). ``mix_op=None`` skips the exchange."""
-        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+        is unused). ``mix_op=None`` skips the exchange.
 
-        def round_fn(stacked, data, n_valid, steps, P, act, key):
-            trained, last = local(stacked, data, n_valid, steps, act, key)
-            if mix_op is not None:
-                theta = trained["proxy"]["params"]
-                like = jax.tree_util.tree_map(lambda x: x[0], theta)
-                flat = jax.vmap(tree_flatten_vector)(theta)        # [K, D]
-                w = jnp.asarray(trained["w"], flat.dtype)
+        With compression active the round program's signature grows the
+        codec state (each client's public copy): ``round_fn(stacked, ef_state, data, n_valid,
+        steps, P, act, key) -> (trained, ef_state', last)`` and the mix_op
+        contract becomes ``mix_op(flat, w, P, ef_state, ckey) -> (z2, w2,
+        ef_state')`` (``ckey`` = the codec RNG key derived from the round
+        key by ``compress_round_key`` — identical on every backend).
+        Uncompressed engines keep the historical signature, so their
+        compiled programs are byte-for-byte unchanged."""
+        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+        compressed = self._compressed and mix_op is not None
+
+        def exchange(trained, P, key, ef_state):
+            theta = trained["proxy"]["params"]
+            like = jax.tree_util.tree_map(lambda x: x[0], theta)
+            flat = jax.vmap(tree_flatten_vector)(theta)            # [K, D]
+            w = jnp.asarray(trained["w"], flat.dtype)
+            if compressed:
+                unb, w2, ef_state = mix_op(flat, w, P, ef_state,
+                                        compress_round_key(key))
+            else:
                 unb, w2 = mix_op(flat, w, P)                       # on-device
-                theta2 = jax.vmap(
-                    lambda v: tree_unflatten_vector(v, like))(unb)
-                trained = dict(trained)
-                trained["proxy"] = dict(trained["proxy"], params=theta2)
-                trained["w"] = w2.astype(jnp.result_type(trained["w"]))
-            return trained, last
+            theta2 = jax.vmap(
+                lambda v: tree_unflatten_vector(v, like))(unb)
+            trained = dict(trained)
+            trained["proxy"] = dict(trained["proxy"], params=theta2)
+            trained["w"] = w2.astype(jnp.result_type(trained["w"]))
+            return trained, ef_state
+
+        if compressed:
+            def round_fn(stacked, ef_state, data, n_valid, steps, P, act, key):
+                trained, last = local(stacked, data, n_valid, steps, act,
+                                      key)
+                trained, ef_state = exchange(trained, P, key, ef_state)
+                return trained, ef_state, last
+        else:
+            def round_fn(stacked, data, n_valid, steps, P, act, key):
+                trained, last = local(stacked, data, n_valid, steps, act,
+                                      key)
+                if mix_op is not None:
+                    trained, _ = exchange(trained, P, key, None)
+                return trained, last
 
         return round_fn
 
@@ -926,28 +1051,58 @@ class FederationEngine:
         same core replays bit-identically per-round, blocked, or across a
         kill/resume. Inactive clients keep ``kept=1``/zero ``sent``
         columns (they hold their mass and send nothing) but still merge
-        arriving mail — in-flight PushSum mass is never dropped."""
-        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+        arriving mail — in-flight PushSum mass is never dropped.
 
-        def round_fn(stacked, buf_t, buf_w, data, n_valid, steps, kept,
-                     sent, act, key):
-            trained, last = local(stacked, data, n_valid, steps, act, key)
-            if mixing:
-                theta_tree = trained["proxy"]["params"]
-                like = jax.tree_util.tree_map(lambda x: x[0], theta_tree)
-                flat = jax.vmap(tree_flatten_vector)(theta_tree)   # [K, D]
-                w = jnp.asarray(trained["w"], flat.dtype)
+        With compression active the signature grows the codec state
+        exactly as in :meth:`_round_core`: ``round_fn(stacked,
+        buf_t, buf_w, ef_state, ...) -> (trained, buf_t, buf_w, ef_state',
+        last)`` — the public copy tracks the raw PushSum numerator
+        θ = z·w (the quantity that enters the in-flight buffer), the
+        de-bias weights stay uncompressed, so w-mass conservation is
+        exact at any τ."""
+        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+        compressed = self._compressed and mixing
+
+        def exchange(trained, buf_t, buf_w, kept, sent, key, ef_state):
+            theta_tree = trained["proxy"]["params"]
+            like = jax.tree_util.tree_map(lambda x: x[0], theta_tree)
+            flat = jax.vmap(tree_flatten_vector)(theta_tree)       # [K, D]
+            w = jnp.asarray(trained["w"], flat.dtype)
+            if compressed:
+                unb, send_t, w2, send_w, ef_state = stale_mix_apply(
+                    flat, w, kept, sent, buf_t[0], buf_w[0],
+                    use_pallas=self.use_pallas, compress=self.compress,
+                    ef_state=ef_state, key=compress_round_key(key))
+            else:
                 unb, send_t, w2, send_w = stale_mix_apply(
                     flat, w, kept, sent, buf_t[0], buf_w[0],
                     use_pallas=self.use_pallas)
-                buf_t = jnp.concatenate([buf_t[1:], send_t[None]])
-                buf_w = jnp.concatenate([buf_w[1:], send_w[None]])
-                theta2 = jax.vmap(
-                    lambda v: tree_unflatten_vector(v, like))(unb)
-                trained = dict(trained)
-                trained["proxy"] = dict(trained["proxy"], params=theta2)
-                trained["w"] = w2.astype(jnp.result_type(trained["w"]))
-            return trained, buf_t, buf_w, last
+            buf_t = jnp.concatenate([buf_t[1:], send_t[None]])
+            buf_w = jnp.concatenate([buf_w[1:], send_w[None]])
+            theta2 = jax.vmap(
+                lambda v: tree_unflatten_vector(v, like))(unb)
+            trained = dict(trained)
+            trained["proxy"] = dict(trained["proxy"], params=theta2)
+            trained["w"] = w2.astype(jnp.result_type(trained["w"]))
+            return trained, buf_t, buf_w, ef_state
+
+        if compressed:
+            def round_fn(stacked, buf_t, buf_w, ef_state, data, n_valid,
+                         steps, kept, sent, act, key):
+                trained, last = local(stacked, data, n_valid, steps, act,
+                                      key)
+                trained, buf_t, buf_w, ef_state = exchange(
+                    trained, buf_t, buf_w, kept, sent, key, ef_state)
+                return trained, buf_t, buf_w, ef_state, last
+        else:
+            def round_fn(stacked, buf_t, buf_w, data, n_valid, steps, kept,
+                         sent, act, key):
+                trained, last = local(stacked, data, n_valid, steps, act,
+                                      key)
+                if mixing:
+                    trained, buf_t, buf_w, _ = exchange(
+                        trained, buf_t, buf_w, kept, sent, key, None)
+                return trained, buf_t, buf_w, last
 
         return round_fn
 
@@ -964,21 +1119,33 @@ class FederationEngine:
         mixing = self.mix != "none" and self.K > 1
         rkey = ("async", n_steps, step_masked, pass_nv, mixing)
         if rkey not in self._rounds:
+            ndon = 4 if (self._compressed and mixing) else 3
             self._rounds[rkey] = jax.jit(
                 self._stale_round_core(n_steps, mixing, step_masked,
                                        pass_nv),
-                donate_argnums=(0, 1, 2) if self._donate else ())
+                donate_argnums=tuple(range(ndon)) if self._donate else ())
         if mixing:
             kept, sent = self._stale_split(t, act)
         else:  # placeholders, never read
             kept = jnp.zeros((self.K,), jnp.float32)
             sent = jnp.zeros((self.K, self.K), jnp.float32)
-        clients, buf_t, buf_w, last = self._rounds[rkey](
-            state["clients"], state["stale_theta"], state["stale_w"],
-            data_s, n_valid, steps_dev, kept, sent, act_arr, key)
+        if self._compressed and mixing:
+            clients, buf_t, buf_w, ef_state, last = self._rounds[rkey](
+                state["clients"], state["stale_theta"], state["stale_w"],
+                state["ef_state"], data_s, n_valid, steps_dev, kept, sent,
+                act_arr, key)
+            out = {"clients": clients, "stale_theta": buf_t,
+                   "stale_w": buf_w, "ef_state": ef_state}
+        else:
+            clients, buf_t, buf_w, last = self._rounds[rkey](
+                state["clients"], state["stale_theta"], state["stale_w"],
+                data_s, n_valid, steps_dev, kept, sent, act_arr, key)
+            out = {"clients": clients, "stale_theta": buf_t,
+                   "stale_w": buf_w}
+            if self._compressed:  # mix-less round: codec state untouched
+                out["ef_state"] = state["ef_state"]
         metrics = {k: np.asarray(v) for k, v in last.items()}
-        return {"clients": clients, "stale_theta": buf_t,
-                "stale_w": buf_w}, metrics
+        return out, metrics
 
     def _rounds_block_stale(self, state, data, t0, T, key, act_sched):
         """Async round-block: ONE compiled outer ``lax.scan`` over rounds
@@ -994,28 +1161,49 @@ class FederationEngine:
         act_stack = (np.ones((T, self.K), bool) if act_sched is None
                      else act_sched)
         mixing = self.mix != "none" and self.K > 1
+        compressed = self._compressed and mixing
         rkey = ("async_block", T, n_steps, step_masked, pass_nv, mixing)
         if rkey not in self._rounds:
             core = self._stale_round_core(n_steps, mixing, step_masked,
                                           pass_nv)
 
-            def block_fn(stacked, buf_t, buf_w, data, n_valid, steps,
-                         kepts, sents, acts, ts, base_key):
-                def body(carry, xs):
-                    st, bt, bw = carry
-                    kept, sent, a, t = xs
-                    st, bt, bw, last = core(st, bt, bw, data, n_valid,
-                                            steps, kept, sent, a,
-                                            round_key(base_key, t))
-                    return (st, bt, bw), last
+            if compressed:
+                def block_fn(stacked, buf_t, buf_w, ef_state, data, n_valid,
+                             steps, kepts, sents, acts, ts, base_key):
+                    def body(carry, xs):
+                        st, bt, bw, r = carry
+                        kept, sent, a, t = xs
+                        st, bt, bw, r, last = core(
+                            st, bt, bw, r, data, n_valid, steps, kept,
+                            sent, a, round_key(base_key, t))
+                        return (st, bt, bw, r), last
 
-                (st, bt, bw), ms = jax.lax.scan(
-                    body, (stacked, buf_t, buf_w),
-                    (kepts, sents, acts, ts))
-                return st, bt, bw, ms
+                    (st, bt, bw, r), ms = jax.lax.scan(
+                        body, (stacked, buf_t, buf_w, ef_state),
+                        (kepts, sents, acts, ts))
+                    return st, bt, bw, r, ms
 
+                ndon = 4
+            else:
+                def block_fn(stacked, buf_t, buf_w, data, n_valid, steps,
+                             kepts, sents, acts, ts, base_key):
+                    def body(carry, xs):
+                        st, bt, bw = carry
+                        kept, sent, a, t = xs
+                        st, bt, bw, last = core(st, bt, bw, data, n_valid,
+                                                steps, kept, sent, a,
+                                                round_key(base_key, t))
+                        return (st, bt, bw), last
+
+                    (st, bt, bw), ms = jax.lax.scan(
+                        body, (stacked, buf_t, buf_w),
+                        (kepts, sents, acts, ts))
+                    return st, bt, bw, ms
+
+                ndon = 3
             self._rounds[rkey] = jax.jit(
-                block_fn, donate_argnums=(0, 1, 2) if self._donate else ())
+                block_fn,
+                donate_argnums=tuple(range(ndon)) if self._donate else ())
         if mixing:
             kepts, sents = stale_mix_schedule(
                 self.mix, t0, T, self.K, self.cfg.topology,
@@ -1026,19 +1214,33 @@ class FederationEngine:
             kepts = jnp.zeros((T, self.K), jnp.float32)
             sents = jnp.zeros((T, self.K, self.K), jnp.float32)
         ts = jnp.arange(t0, t0 + T, dtype=jnp.int32)
-        clients, buf_t, buf_w, ms = self._rounds[rkey](
-            state["clients"], state["stale_theta"], state["stale_w"],
-            data_s, n_valid, steps_dev, kepts, sents,
-            jnp.asarray(act_stack), ts, key)
-        return {"clients": clients, "stale_theta": buf_t,
-                "stale_w": buf_w}, self._finish_block(ms, act_stack, data)
+        if compressed:
+            clients, buf_t, buf_w, ef_state, ms = self._rounds[rkey](
+                state["clients"], state["stale_theta"], state["stale_w"],
+                state["ef_state"], data_s, n_valid, steps_dev, kepts, sents,
+                jnp.asarray(act_stack), ts, key)
+            out = {"clients": clients, "stale_theta": buf_t,
+                   "stale_w": buf_w, "ef_state": ef_state}
+        else:
+            clients, buf_t, buf_w, ms = self._rounds[rkey](
+                state["clients"], state["stale_theta"], state["stale_w"],
+                data_s, n_valid, steps_dev, kepts, sents,
+                jnp.asarray(act_stack), ts, key)
+            out = {"clients": clients, "stale_theta": buf_t,
+                   "stale_w": buf_w}
+            if self._compressed:  # mix-less block: codec state untouched
+                out["ef_state"] = state["ef_state"]
+        return out, self._finish_block(ms, act_stack, data)
 
     def _build_round(self, n_steps: int, mix_op, step_masked: bool = False,
                      pass_n_valid: bool = True):
         """Jitted single-round program (the ``run_round`` fast path)."""
+        donate = self._donate
+        if donate and self._compressed and mix_op is not None:
+            donate = (0, 1)  # stacked state AND the codec state in place
         return jax.jit(self._round_core(n_steps, mix_op, step_masked,
                                         pass_n_valid),
-                       donate_argnums=self._donate)
+                       donate_argnums=donate)
 
     def _build_block(self, n_rounds: int, n_steps: int, mix_ops,
                      step_masked: bool = False, pass_n_valid: bool = True):
@@ -1057,19 +1259,40 @@ class FederationEngine:
         Per-round RNG keys are folded IN-SCAN from the base key
         (``round_key(base_key, t)`` with the runtime ``ts`` round indices),
         so a blocked run replays the per-round key schedule bit-exactly."""
+        donate = self._donate
         if not isinstance(mix_ops, (list, tuple)):
             core = self._round_core(n_steps, mix_ops, step_masked,
                                     pass_n_valid)
 
-            def block_fn(stacked, data, n_valid, steps, Ps, acts, ts,
-                         base_key):
-                def body(st, xs):
-                    P, act, t = xs
-                    st2, last = core(st, data, n_valid, steps, P, act,
-                                     round_key(base_key, t))
-                    return st2, last
+            if self._compressed and mix_ops is not None:
+                # compressed vmap block: the codec state joins the scan
+                # carry exactly like the async τ-buffer, so any block size
+                # replays the per-round public-copy trajectory bit-exactly
+                def block_fn(stacked, ef_state, data, n_valid, steps, Ps,
+                             acts, ts, base_key):
+                    def body(carry, xs):
+                        st, r = carry
+                        P, act, t = xs
+                        st2, r2, last = core(st, r, data, n_valid, steps,
+                                             P, act, round_key(base_key, t))
+                        return (st2, r2), last
 
-                return jax.lax.scan(body, stacked, (Ps, acts, ts))
+                    (st, r), ms = jax.lax.scan(
+                        body, (stacked, ef_state), (Ps, acts, ts))
+                    return st, r, ms
+
+                if donate:
+                    donate = (0, 1)
+            else:
+                def block_fn(stacked, data, n_valid, steps, Ps, acts, ts,
+                             base_key):
+                    def body(st, xs):
+                        P, act, t = xs
+                        st2, last = core(st, data, n_valid, steps, P, act,
+                                         round_key(base_key, t))
+                        return st2, last
+
+                    return jax.lax.scan(body, stacked, (Ps, acts, ts))
         else:
             cores = [self._round_core(n_steps, op, step_masked, pass_n_valid)
                      for op in mix_ops]
@@ -1086,14 +1309,23 @@ class FederationEngine:
                     lambda *xs: jnp.stack(xs), *lasts)
                 return stacked, stacked_ms
 
-        return jax.jit(block_fn, donate_argnums=self._donate)
+        return jax.jit(block_fn, donate_argnums=donate)
 
     def _mix_matmul_op(self):
         """The stacked matmul exchange as a mix_op: ``(flat, w, P) ->
         (z2, w2)`` de-biased, dispatched plain-XLA or Pallas-fused per
-        ``cfg.use_pallas``. One definition serves the single-round and
+        ``cfg.use_pallas``; with compression active the contract grows the
+        codec-state/key operands (``(flat, w, P, ef_state, ckey) -> (z2,
+        w2, ef_state2)``) and the exchange takes the compressed plain-XLA path
+        (``use_pallas`` is a no-op there — the fused kernel is
+        uncompressed-only). One definition serves the single-round and
         round-block programs so the two paths cannot drift."""
         up = self.use_pallas
+        if self._compressed:
+            spec = self.compress
+            return lambda flat, w, P, ef_state, ckey: pushsum_mix_debiased(
+                flat, w, P, use_pallas=up, compress=spec, ef_state=ef_state,
+                key=ckey)
         return lambda flat, w, P: pushsum_mix_debiased(flat, w, P,
                                                        use_pallas=up)
 
@@ -1138,9 +1370,10 @@ class FederationEngine:
         return data_s, n_valid, pass_nv, n_steps, step_masked, \
             jnp.asarray(steps_arr)
 
-    def _round_stacked(self, stacked, data, t, key, act):
+    def _round_stacked(self, state, data, t, key, act):
         data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
             self._stacked_inputs(data)
+        stacked = self._clients_of(state)
         act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
         mixing = self.mix != "none" and self.K > 1
         P = jnp.zeros((0,))  # placeholder when no matmul mix runs
@@ -1168,10 +1401,18 @@ class FederationEngine:
                     n_steps,
                     self._shard_mix_op(t, act_key) if mixing else None,
                     step_masked, pass_nv)
-        stacked, last = self._rounds[rkey](
-            stacked, data_s, n_valid, steps_dev, P, act_arr, key)
+        if self._compressed and mixing:
+            stacked, ef_state, last = self._rounds[rkey](
+                stacked, state["ef_state"], data_s, n_valid, steps_dev, P,
+                act_arr, key)
+            out: Any = {"clients": stacked, "ef_state": ef_state}
+        else:
+            stacked, last = self._rounds[rkey](
+                stacked, data_s, n_valid, steps_dev, P, act_arr, key)
+            out = ({"clients": stacked, "ef_state": state["ef_state"]}
+                   if self._compressed else stacked)
         metrics = {k: np.asarray(v) for k, v in last.items()}
-        return stacked, metrics
+        return out, metrics
 
 
 # ---------------------------------------------------------------------------

@@ -108,14 +108,30 @@ def pushsum_mix(thetas: jnp.ndarray, weights: jnp.ndarray, P: jnp.ndarray,
 
 def pushsum_mix_debiased(thetas: jnp.ndarray, weights: jnp.ndarray,
                          P: jnp.ndarray, *, use_pallas: bool = False,
-                         interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                         interpret=None, compress=None, ef_state=None,
+                         key=None):
     """The engine's whole stacked exchange (Algorithm 1 lines 7-11):
     ``z' = (P·z) / (P·w)[:, None]``, ``w' = P·w`` — mix AND de-bias.
 
     This is the single dispatch point the ``FederationEngine`` sync
     backends call: plain XLA (two matmuls + divide, the reference
     semantics) or the Pallas-fused kernel with the de-bias fused into the
-    same pass (``use_pallas``, per ``ProxyFLConfig.use_pallas``)."""
+    same pass (``use_pallas``, per ``ProxyFLConfig.use_pallas``).
+
+    ``compress`` (a :class:`repro.core.compress.CompressionSpec`) routes
+    the exchange through the compressed protocol instead: each sender
+    transmits a compressed DELTA against its public copy ``ef_state``
+    [K, D] (``key`` feeds int8's stochastic rounding), receivers mix the
+    updated dense copies, and the call returns a THREE-tuple
+    ``(z', w', ef_state')``. The Pallas kernels
+    implement the uncompressed chain only, so the compressed branch always
+    takes the plain-XLA path and ``use_pallas`` is ignored (documented in
+    ``core.compress``). ``compress=None`` keeps this function — and its
+    compiled program — byte-for-byte the uncompressed exchange."""
+    if compress is not None:
+        from .compress import compressed_pushsum_mix
+        return compressed_pushsum_mix(thetas, weights, P, ef_state, key,
+                                      compress)
     if use_pallas:
         from ..kernels.pushsum_mix import fused_pushsum_mix
         return fused_pushsum_mix(thetas, weights, P, debias=True,
@@ -128,7 +144,7 @@ def pushsum_mix_debiased(thetas: jnp.ndarray, weights: jnp.ndarray,
 def stale_mix_apply(flat: jnp.ndarray, w: jnp.ndarray, kept: jnp.ndarray,
                     sent: jnp.ndarray, buf_t0: jnp.ndarray,
                     buf_w0: jnp.ndarray, *, use_pallas: bool = False,
-                    interpret=None):
+                    interpret=None, compress=None, ef_state=None, key=None):
     """One stale (async τ>0) exchange on the stacked proxies — the
     delayed-delivery counterpart of :func:`pushsum_mix_debiased` and the
     on-device application of :func:`stale_gossip_reference`'s round body:
@@ -137,7 +153,18 @@ def stale_mix_apply(flat: jnp.ndarray, w: jnp.ndarray, kept: jnp.ndarray,
     de-bias by the identically-delayed weights. Returns ``(z', send_t,
     w', send_w)``; the caller owns the buffer rotation. ``use_pallas``
     fuses the whole chain into one blocked pass per parameter chunk
-    (:func:`repro.kernels.pushsum_mix.fused_stale_mix`)."""
+    (:func:`repro.kernels.pushsum_mix.fused_stale_mix`).
+
+    ``compress``/``ef_state``/``key`` route the in-flight transmission
+    (public-copy delta coding on the numerator θ)
+    through the codec with error feedback exactly as in
+    :func:`pushsum_mix_debiased` — the return grows a trailing ``ef_state'``
+    (five-tuple) and ``use_pallas`` is ignored (the fused kernel is
+    uncompressed-only; see ``core.compress``)."""
+    if compress is not None:
+        from .compress import compressed_stale_mix
+        return compressed_stale_mix(flat, w, kept, sent, buf_t0, buf_w0,
+                                    ef_state, key, compress)
     if use_pallas:
         from ..kernels.pushsum_mix import fused_stale_mix
         return fused_stale_mix(flat, w, kept, sent, buf_t0, buf_w0,

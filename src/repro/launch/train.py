@@ -142,6 +142,19 @@ def main(argv=None) -> int:
                          "keeps its chunked XLA path — the fused DP "
                          "clip->noise->step applies to the classifier-scale "
                          "protocol steps (repro.core.protocol)")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "topk", "int8"),
+                    help="compressed proxy exchange (repro.core.compress): "
+                         "top-k sparsification or int8 stochastic-rounding "
+                         "quantization of the DELTA against a public proxy "
+                         "copy carried per client in the engine state "
+                         "(error feedback — truncated mass is re-sent "
+                         "later); 'none' keeps the exchange byte-for-byte "
+                         "full-precision")
+    ap.add_argument("--compress-ratio", type=float, default=0.25,
+                    help="top-k kept fraction of the flattened proxy "
+                         "(with --compress topk; 0.25 -> ~6.4x fewer "
+                         "bytes on the wire)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="snapshot complete federation state here (enables "
                          "preemption-tolerant runs; see repro.checkpoint)")
@@ -162,7 +175,8 @@ def main(argv=None) -> int:
         local_steps=args.steps_per_round, lr=args.lr, batch_size=args.batch,
         topology=args.topology, seed=args.seed,
         dropout_rate=args.dropout_rate, staleness=args.staleness,
-        use_pallas=args.use_pallas,
+        use_pallas=args.use_pallas, compress=args.compress,
+        compress_ratio=args.compress_ratio,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,
                     noise_multiplier=args.sigma))
     if args.staleness and args.backend != "async":

@@ -1,0 +1,372 @@
+"""Compressed proxy exchange (repro.core.compress): the top-k / int8
+codecs against their numpy oracles, the public-copy conservation
+invariants (property-based + pinned deterministic twin: sender and
+receivers advance the copy in lockstep, truncated mass stays in the
+implicit residual, silent clients' copies are untouched), the engine
+held to the ``compressed_gossip_reference`` executable spec, w-mass
+conservation under compression on the stale backend, kill/resume
+bit-identity with the copies in the checkpoint, and the guard rails
+(shard_map rejection, fingerprint refusal across a compression-config
+change, wire-byte reduction floors).
+
+Cross-backend agreement (compress="none" bitwise, topk/int8 loop-vs-vmap
+under the quantized grade, compressed block bit-identity) lives in the
+conformance matrix — tests/test_conformance.py ``compress-*`` cases."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, st
+
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core.baselines import run_federated
+from repro.core.compress import (CompressionSpec, compress_round_key,
+                                 compress_spec, compressed_gossip_reference,
+                                 encode_decode, ef_encode_reference,
+                                 int8_reference, topk_k, topk_reference,
+                                 wire_bytes)
+from repro.core.engine import (FederationEngine, round_key,
+                               single_model_engine)
+from repro.core.gossip import mix_matrix
+from repro.core.protocol import ModelSpec
+from repro.nn.modules import tree_flatten_vector
+from repro.nn.vision import get_vision_model
+
+K, N_CLASSES, SHAPE = 4, 10, (14, 14, 1)
+
+
+@pytest.fixture(scope="module")
+def mlp_spec():
+    vm = get_vision_model("mlp")
+    return ModelSpec("mlp", lambda k: vm.init(k, SHAPE, N_CLASSES), vm.apply)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    from repro.data.synthetic import make_classification_data
+    x, y = make_classification_data(jax.random.PRNGKey(0), 400, SHAPE,
+                                    N_CLASSES, sep=2.0)
+    return [(x[i * 100:(i + 1) * 100], y[i * 100:(i + 1) * 100])
+            for i in range(K)]
+
+
+# ---------------------------------------------------------------------------
+# codecs vs numpy oracles
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("shape", [(1, 1), (2, 7), (3, 64), (4, 333),
+                                   (5, 1024)])
+def test_topk_matches_reference(shape):
+    """lax.top_k codec == stable-argsort numpy oracle, bitwise — over odd/
+    ragged D including the k=1 floor, on values that exercise bf16 wire
+    rounding (normals well inside bf16 range)."""
+    u = np.asarray(jax.random.normal(jax.random.PRNGKey(shape[1]), shape,
+                                     jnp.float32))
+    for ratio in (0.1, 0.25, 1.0):
+        spec = CompressionSpec(mode="topk", ratio=ratio)
+        got = np.asarray(encode_decode(jnp.asarray(u),
+                                       jax.random.PRNGKey(0), spec))
+        np.testing.assert_array_equal(got, topk_reference(u, ratio))
+        assert (np.count_nonzero(got, axis=1)
+                <= topk_k(shape[1], ratio)).all()
+
+
+@pytest.mark.fast
+def test_topk_tie_breaking_pinned():
+    """Equal-magnitude ties resolve lowest-index-first on BOTH sides
+    (lax.top_k's contract == stable argsort) — a silent tie-flip would
+    break loop/vmap bit-agreement of the deterministic codec."""
+    u = np.array([[0.5, -2.0, 2.0, 1.0, -1.0]], np.float32)
+    spec = CompressionSpec(mode="topk", ratio=0.4)  # k = 2
+    got = np.asarray(encode_decode(jnp.asarray(u), jax.random.PRNGKey(0),
+                                   spec))
+    np.testing.assert_array_equal(got, topk_reference(u, 0.4))
+    np.testing.assert_array_equal(got, [[0.0, -2.0, 2.0, 0.0, 0.0]])
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("D", [3, 50, 512])
+def test_int8_matches_reference(D):
+    """int8 stochastic rounding == numpy oracle when both consume the SAME
+    U[0,1) noise block (drawn from the real codec key schedule)."""
+    u = np.asarray(jax.random.normal(jax.random.PRNGKey(D), (3, D),
+                                     jnp.float32)) * 5.0
+    key = compress_round_key(jax.random.PRNGKey(7))
+    noise = jax.random.uniform(key, u.shape, jnp.float32)
+    spec = CompressionSpec(mode="int8")
+    got = np.asarray(encode_decode(jnp.asarray(u), key, spec))
+    np.testing.assert_array_equal(got, int8_reference(u, np.asarray(noise)))
+    # the wire alphabet really is 8-bit: decoded / scale ∈ [-127, 127] ints
+    scale = np.maximum(np.abs(u).max(axis=1), 1e-12) / 127.0
+    q = got / scale[:, None]
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+    assert np.abs(q).max() <= 127.0 + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# public-copy conservation: c + (m − pub') == m − pub, lockstep copies
+
+
+def _conservation_case(seed: int, mode: str, D: int, drop: int):
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=(K, D)).astype(np.float32)
+    pub = rng.normal(scale=0.9, size=(K, D)).astype(np.float32)
+    P = np.asarray(mix_matrix("pushsum", seed, K, "exponential", None),
+                   np.float32)
+    sent = P.copy()
+    np.fill_diagonal(sent, 0.0)
+    if drop:  # a client with no off-diagonal column mass transmits nothing
+        sent[:, drop % K] = 0.0
+    spec = CompressionSpec(mode=mode)
+    noise = rng.random(size=(K, D)).astype(np.float32)
+    c, pub2 = ef_encode_reference(m, pub, sent, spec, noise=noise)
+    sends = sent.sum(axis=0) > 0
+    u = m - pub
+    # transmitting clients: the copy advances in LOCKSTEP with the wire
+    # (pub' is exactly pub + c — what every receiver reconstructs), so
+    # the owed mass splits exactly between the wire and the implicit
+    # residual: c + (m − pub') ≈ m − pub, with truncation living in the
+    # residual, never destroyed
+    np.testing.assert_array_equal(pub2[sends], (pub + c)[sends])
+    np.testing.assert_allclose((c + (m - pub2))[sends], u[sends],
+                               rtol=1e-6, atol=1e-6)
+    if mode == "topk":
+        # the delta's dropped coordinates carry c = 0 exactly, so their
+        # owed mass survives bitwise; kept coordinates ship bf16
+        k = topk_k(D, spec.ratio)
+        assert (np.count_nonzero(c[sends], axis=1) <= k).all()
+        dropped = sends[:, None] & (c == 0.0)
+        np.testing.assert_array_equal((m - pub2)[dropped], u[dropped])
+    # silent clients: nothing on the wire, copy untouched — receivers saw
+    # no update, so advancing pub through a §3.4 dropout would
+    # desynchronize sender and receivers
+    np.testing.assert_array_equal(c[~sends], 0.0)
+    np.testing.assert_array_equal(pub2[~sends], pub[~sends])
+
+
+@given(st.integers(0, 1000), st.sampled_from(["topk", "int8"]),
+       st.integers(1, 200), st.integers(0, K))
+def test_ef_conservation_property(seed, mode, D, drop):
+    """Wire-plus-residual mass is conserved, copies advance in lockstep,
+    and silent clients keep their copy, for any message/copy/topology
+    draw."""
+    _conservation_case(seed, mode, D, drop)
+
+
+@pytest.mark.fast
+def test_ef_conservation_pinned():
+    """Deterministic twin of the conservation property (runs even when
+    hypothesis is not installed)."""
+    for seed, mode, D, drop in [(0, "topk", 64, 0), (1, "topk", 7, 2),
+                                (2, "int8", 64, 0), (3, "int8", 33, 1)]:
+        _conservation_case(seed, mode, D, drop)
+
+
+@pytest.mark.fast
+def test_jax_ef_matches_reference_through_mix():
+    """One full compressed sync round on device == the numpy executable
+    spec, including the public copies it leaves behind (both sides
+    warm-start the copies at z0)."""
+    from repro.core.compress import compressed_pushsum_mix
+    rng = np.random.default_rng(5)
+    z = rng.normal(size=(K, 96)).astype(np.float32)
+    w = np.ones(K, np.float32)
+    P = np.asarray(mix_matrix("pushsum", 3, K, "exponential", None),
+                   np.float32)
+    spec = CompressionSpec(mode="topk", ratio=0.25)
+    z2, w2, pub2 = compressed_pushsum_mix(
+        jnp.asarray(z), jnp.asarray(w), jnp.asarray(P),
+        jnp.asarray(z), jax.random.PRNGKey(0), spec)
+    ref_z, ref_w, ref_pub = compressed_gossip_reference(z, w, [P], spec)
+    np.testing.assert_allclose(np.asarray(z2), ref_z, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(w2), ref_w, rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(pub2), ref_pub, rtol=1e-6,
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# wire formats
+
+
+@pytest.mark.fast
+def test_wire_bytes_reduction_floors():
+    """The byte claims the benchmarks and CI gate rely on: ≥4x for top-k
+    at ratio 0.25 (6.4x structural), ~4x for int8, at paper-scale D."""
+    for D in (1_000, 44_860, 1_000_000):
+        none = wire_bytes("none", D)
+        assert none == 4 * D
+        assert none / wire_bytes("topk", D, 0.25) >= 4.0
+        assert none / wire_bytes("int8", D) >= 3.9
+    assert wire_bytes("topk", 8, 1.0) == 1 + 16  # bitmap + all values
+    with pytest.raises(ValueError):
+        wire_bytes("gzip", 100)
+
+
+@pytest.mark.fast
+def test_compress_spec_none_is_bypass(mlp_spec):
+    """compress="none" builds NO spec and NO state wrapper: the engine
+    runs the uncompressed round programs verbatim (bitwise equality across
+    backends is pinned by the conformance compress-none cases)."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=1, batch_size=50,
+                        dp=DPConfig(enabled=False))
+    assert compress_spec(cfg) is None
+    eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                              backend="vmap")
+    assert eng.compress is None and not eng._compressed
+    state = eng.init_states(jax.random.PRNGKey(0))
+    assert "ef_state" not in state
+    ceng = single_model_engine(
+        mlp_spec, dataclasses.replace(cfg, compress="topk"), False,
+        mix="pushsum", backend="vmap")
+    cstate = ceng.init_states(jax.random.PRNGKey(0))
+    assert cstate["ef_state"].shape[0] == K and cstate["ef_state"].dtype \
+        == jnp.float32
+    # warm start: the copies ARE the initial proxies (the one-time setup
+    # broadcast), not zeros
+    np.testing.assert_array_equal(
+        np.asarray(cstate["ef_state"]),
+        np.asarray(jax.vmap(tree_flatten_vector)(
+            cstate["clients"]["proxy"]["params"])).astype(np.float32))
+
+
+def test_shard_map_rejects_compression(mlp_spec):
+    """The ppermute exchange ships full-precision tensors — compression
+    must refuse at construction, not silently run uncompressed."""
+    cfg = ProxyFLConfig(n_clients=1, rounds=1, batch_size=50,
+                        compress="int8", dp=DPConfig(enabled=False))
+    vmap_eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                                   backend="vmap", n_clients=1)
+    mesh = jax.make_mesh((1,), ("clients",))
+    with pytest.raises(ValueError, match="shard_map"):
+        FederationEngine(cfg, n_clients=1, step_fns=vmap_eng.step_fns[0],
+                         init_fns=vmap_eng.init_fns[0],
+                         sample_fn=vmap_eng.sample_fn, backend="shard_map",
+                         mix="pushsum", mesh=mesh, axis="clients")
+
+
+# ---------------------------------------------------------------------------
+# engine vs executable spec: lr=0 isolates the exchange
+
+
+def test_engine_matches_compressed_gossip_reference(mlp_spec, dataset):
+    """With lr=0 (local steps are exact no-ops) the engine's compressed
+    vmap rounds must reproduce ``compressed_gossip_reference`` — z, w AND
+    the carried public copies — from the same z0 and round schedule
+    (both warm-start the copies at z0)."""
+    T = 3
+    cfg = ProxyFLConfig(n_clients=K, rounds=T, batch_size=50, local_steps=1,
+                        lr=0.0, compress="topk", compress_ratio=0.25,
+                        dp=DPConfig(enabled=False))
+    eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                              backend="vmap")
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    z0 = np.asarray(jax.vmap(tree_flatten_vector)(
+        state["clients"]["proxy"]["params"]))
+    w0 = np.asarray(state["clients"]["w"])
+    state, _ = eng.run_rounds(state, dataset, 0, T, key)
+    z = np.asarray(jax.vmap(tree_flatten_vector)(
+        state["clients"]["proxy"]["params"]))
+    Ps = [np.asarray(mix_matrix("pushsum", t, K, cfg.topology, None))
+          for t in range(T)]
+    ref_z, ref_w, ref_pub = compressed_gossip_reference(
+        z0, w0, Ps, CompressionSpec(mode="topk", ratio=0.25))
+    np.testing.assert_allclose(z, ref_z, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(state["clients"]["w"]), ref_w,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state["ef_state"]), ref_pub,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_stale_w_mass_conserved_under_compression(mlp_spec, dataset):
+    """async τ=2 + int8 + §3.4 dropout: de-bias weights are NEVER
+    compressed, so total w-mass (clients + in-flight buffer) stays exactly
+    K every round even while the θ payload is quantized."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=4, batch_size=50, local_steps=1,
+                        lr=0.0, staleness=2, compress="int8",
+                        dp=DPConfig(enabled=False))
+    eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                              backend="async")
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    masks = [np.array([True, False, True, True]), None,
+             np.array([False, True, False, True]), None]
+    for t, act in enumerate(masks):
+        state, _ = eng.run_round(state, dataset, t, round_key(key, t),
+                                 active=act)
+        w_mass = (np.asarray(state["clients"]["w"]).sum()
+                  + np.asarray(state["stale_w"]).sum())
+        np.testing.assert_allclose(w_mass, K, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# trajectories, checkpoints, guard rails (run_federated level)
+
+
+def _run(mlp_spec, dataset, cfg, **kw):
+    return run_federated("proxyfl", [mlp_spec] * K, mlp_spec, dataset,
+                         dataset[0], cfg, seed=0, eval_every=cfg.rounds,
+                         backend="vmap", **kw)
+
+
+def _proxy_flats(res):
+    return np.stack([np.asarray(tree_flatten_vector(c.proxy_params))
+                     for c in res["clients"]])
+
+
+@pytest.mark.fast
+def test_compression_engages(mlp_spec, dataset):
+    """topk/int8 trajectories genuinely differ from uncompressed (the
+    dispatch is live, not a silent fall-through) and from each other."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=2,
+                        dp=DPConfig(enabled=False))
+    flats = {mode: _proxy_flats(_run(mlp_spec, dataset, dataclasses.replace(
+        cfg, compress=mode))) for mode in ("none", "topk", "int8")}
+    assert not np.array_equal(flats["none"], flats["topk"])
+    assert not np.array_equal(flats["none"], flats["int8"])
+    assert not np.array_equal(flats["topk"], flats["int8"])
+
+
+def test_compressed_kill_resume_bit_identical(tmp_path, mlp_spec, dataset):
+    """Kill a compressed (topk) federation at a checkpoint edge and
+    resume: bit-identity holds only if the codec's public copies
+    round-trip through the snapshot exactly."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=4, batch_size=50, local_steps=2,
+                        compress="topk", compress_ratio=0.1,
+                        dp=DPConfig(enabled=True, noise_multiplier=1.0,
+                                    clip_norm=1.0))
+    d = os.path.join(str(tmp_path), "ck")
+    ref = _run(mlp_spec, dataset, cfg)
+    ckpt = dict(checkpoint_dir=d, checkpoint_every=2)
+    _run(mlp_spec, dataset, dataclasses.replace(cfg, rounds=2), **ckpt)
+    resumed = _run(mlp_spec, dataset, cfg, resume=True, **ckpt)
+    np.testing.assert_array_equal(_proxy_flats(ref), _proxy_flats(resumed))
+    assert resumed["epsilon"] == ref["epsilon"]
+    # the copies are real state by round 2: nonzero in the snapshot
+    import glob
+    npz = sorted(glob.glob(os.path.join(d, "proxyfl_s0", "*.npz")))
+    assert npz, "checkpoint snapshots missing"
+    snap = np.load(npz[-1])
+    rkeys = [k for k in snap.files if "compress_ef_state" in k]
+    assert rkeys, f"no codec state in checkpoint: {snap.files[:8]}..."
+    assert any(np.abs(snap[k]).sum() > 0 for k in rkeys)
+
+
+def test_fingerprint_refuses_compression_mismatch(tmp_path, mlp_spec,
+                                                  dataset):
+    """A checkpoint written uncompressed must refuse to resume into a
+    compressed run (and vice versa) — the trajectory cannot be replayed
+    across a compression-config change."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=1,
+                        dp=DPConfig(enabled=False))
+    d = os.path.join(str(tmp_path), "ck")
+    ckpt = dict(checkpoint_dir=d, checkpoint_every=1)
+    _run(mlp_spec, dataset, cfg, **ckpt)
+    with pytest.raises(ValueError, match="fingerprint"):
+        _run(mlp_spec, dataset,
+             dataclasses.replace(cfg, rounds=3, compress="topk"),
+             resume=True, **ckpt)

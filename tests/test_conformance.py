@@ -37,10 +37,31 @@ path never changes step counts), and fused round-blocks stay bit-identical
 to fused per-round execution. A run tuple may carry a third element —
 ``(backend, rounds_per_block, use_pallas)`` — to fuse one side only.
 
+The ``compress-*`` cases pin the compressed proxy exchange
+(``ProxyFLConfig.compress`` — top-k / int8 wire formats with error
+feedback, repro.core.compress): ``compress="none"`` requested explicitly
+through the run_federated override is bit-identical to the default
+uncompressed protocol on loop, vmap, async-τ0 AND async-τ2 (the engine
+must bypass the compression wrapper entirely, not merely approximate it),
+compressed round-blocks of any size are bit-identical to compressed
+per-round execution (the error-feedback residual rides the scan carry),
+and topk/int8 agree loop-vs-vmap under the ``quantized`` grade below. A
+run tuple may carry a FOURTH element — ``(backend, rounds_per_block,
+use_pallas, compress)`` — to compress one side only.
+
+``quantized``
+    ``np.testing.assert_allclose(atol=5e-2, rtol=0)``, epsilon still
+    EXACT (compression never touches the accountant — it gossips, it does
+    not train). Used for topk/int8 loop-vs-vmap: the backends' ~1e-6
+    float divergence can flip a top-k selection or an int8 rounding
+    decision, so agreement is bounded by the quantization granularity,
+    not by fp epsilon.
+
 The ``fast``-marked subset is the CI smoke (scripts/ci.sh --fast): it
 covers loop==vmap, ragged-on-vmap, block bit-identity, the async-τ0
-equivalence smoke and async-τ2 block/resume bit-identity without
-exceeding the shard budget.
+equivalence smoke, async-τ2 block/resume bit-identity and the compression
+parity slice (none-bitwise + topk/int8 loop-vs-vmap) without exceeding
+the shard budget.
 """
 import dataclasses
 import os
@@ -97,12 +118,14 @@ def run_cache():
 @dataclass(frozen=True)
 class Case:
     id: str
-    # (backend, rounds_per_block[, use_pallas]) of the reference and each
-    # candidate run; backend None = run_federated's default ("auto"), the
-    # optional third element fuses that run's hot path (default False)
+    # (backend, rounds_per_block[, use_pallas[, compress]]) of the
+    # reference and each candidate run; backend None = run_federated's
+    # default ("auto"), the optional third element fuses that run's hot
+    # path (default False), the optional fourth sets that run's compress
+    # mode override (default None = leave cfg.compress alone)
     ref: Tuple
     cands: Tuple
-    expect: str = "exact"          # "exact" | "close" | "epsilon"
+    expect: str = "exact"   # "exact" | "close" | "epsilon" | "quantized"
     method: str = "proxyfl"
     data: str = "rect"             # "rect" | "ragged"
     fast: bool = False
@@ -112,7 +135,8 @@ class Case:
 def _c(id, ref, cands, **kw):
     cfg = {k: kw.pop(k) for k in list(kw)
            if k in ("rounds", "local_steps", "dropout_rate", "staleness",
-                    "dp", "seed", "use_pallas")}
+                    "dp", "seed", "use_pallas", "compress",
+                    "compress_ratio")}
     return Case(id=id, ref=ref, cands=tuple(cands),
                 cfg=tuple(sorted(cfg.items())), **kw)
 
@@ -190,6 +214,40 @@ CASES = [
     # fused round-blocks == fused per-round, bit for bit (same program)
     _c("pallas-blocks-bitwise", ("vmap", 1), [("vmap", 2), ("vmap", 4)],
        fast=True, rounds=4, local_steps=2, dp=True, use_pallas=True),
+    # -- compressed exchange: compress="none" requested explicitly is the
+    #    uncompressed protocol VERBATIM on every backend (the engine must
+    #    bypass the compression wrapper, not approximate it) -------------
+    _c("compress-none-bitwise-sync",
+       ("vmap", 1), [("vmap", 1, False, "none"),
+                     ("async", 1, False, "none")],
+       fast=True, rounds=2, local_steps=2, dp=True),
+    _c("compress-none-bitwise-loop", ("loop", 1),
+       [("loop", 1, False, "none")], fast=True, rounds=2, local_steps=2,
+       dp=True),
+    _c("compress-none-bitwise-async-t2", ("async", 1),
+       [("async", 1, False, "none")], rounds=3, local_steps=2, dp=True,
+       staleness=2),
+    # topk/int8 loop vs vmap: agreement bounded by the quantization
+    # granularity (a 1e-6 training divergence can flip a selection), with
+    # epsilon compared EXACTLY — compression must never touch the
+    # accountant
+    _c("compress-topk-loop-vs-vmap", ("loop", 1), [("vmap", 1)],
+       expect="quantized", fast=True, rounds=2, local_steps=2, dp=True,
+       compress="topk"),
+    _c("compress-int8-loop-vs-vmap", ("loop", 1), [("vmap", 1)],
+       expect="quantized", fast=True, rounds=2, local_steps=2, dp=True,
+       compress="int8"),
+    # compressed round-blocks == compressed per-round, bit for bit (the
+    # error-feedback residual rides the scan carry)
+    _c("compress-topk-blocks-bitwise", ("vmap", 1), [("vmap", 2),
+                                                     ("vmap", 4)],
+       rounds=4, local_steps=2, dp=True, compress="topk",
+       compress_ratio=0.1),
+    _c("compress-int8-async-t2-blocks-bitwise", ("async", 1),
+       [("async", 2), ("async", 4)], rounds=4, local_steps=2, dp=True,
+       staleness=2, dropout_rate=0.25, compress="int8"),
+    _c("compress-topk-ragged", ("vmap", 1), [("vmap", 2)], data="ragged",
+       rounds=2, local_steps=0, dp=True, compress="topk"),
 ]
 
 
@@ -212,8 +270,9 @@ def _final_flats(res):
 
 
 def _run(cache, case: Case, mlp_spec, datasets, backend, rpb,
-         pallas=False):
-    memo_key = (case.method, case.data, case.cfg, backend, rpb, pallas)
+         pallas=False, comp=None):
+    memo_key = (case.method, case.data, case.cfg, backend, rpb, pallas,
+                comp)
     if memo_key in cache:
         return cache[memo_key]
     cfg = _mk_cfg(case)
@@ -221,7 +280,7 @@ def _run(cache, case: Case, mlp_spec, datasets, backend, rpb,
     res = run_federated(case.method, [mlp_spec] * K, mlp_spec, data,
                         data[0], cfg, seed=0, eval_every=cfg.rounds,
                         backend=backend, rounds_per_block=rpb,
-                        use_pallas=pallas or None)
+                        use_pallas=pallas or None, compress=comp)
     out = {"flats": _final_flats(res),
            "epsilon": tuple(res["epsilon"]),
            "hist_rounds": tuple(r["round"] for r in res["history"])}
@@ -239,11 +298,12 @@ def _case_params():
 def test_conformance(case, run_cache, mlp_spec, datasets):
     ref = _run(run_cache, case, mlp_spec, datasets, *case.ref)
     for cand in case.cands:
-        backend, rpb, pallas = (tuple(cand) + (False,))[:3]
+        backend, rpb, pallas, comp = (tuple(cand) + (False, None))[:4]
         got = _run(run_cache, case, mlp_spec, datasets, backend, rpb,
-                   pallas)
+                   pallas, comp)
         label = (f"{case.id}: {case.ref} vs ({backend}, B={rpb}"
-                 f"{', pallas' if pallas else ''})")
+                 f"{', pallas' if pallas else ''}"
+                 f"{f', compress={comp}' if comp else ''})")
         assert got["epsilon"] == ref["epsilon"], f"{label}: epsilon differs"
         if case.expect == "epsilon":
             continue
@@ -254,6 +314,10 @@ def test_conformance(case, run_cache, mlp_spec, datasets):
                 np.testing.assert_array_equal(
                     ref["flats"][role], v,
                     err_msg=f"{label}: {role} not bit-identical")
+            elif case.expect == "quantized":
+                np.testing.assert_allclose(
+                    ref["flats"][role], v, atol=5e-2, rtol=0,
+                    err_msg=f"{label}: {role} outside quantization bound")
             else:
                 np.testing.assert_allclose(
                     ref["flats"][role], v, atol=1e-5, rtol=1e-4,
@@ -279,6 +343,22 @@ def test_conformance_table_sanity():
                       if len(run) > 2 and run[2]}
     assert {"loop", "vmap", "async"} <= fused_backends
     assert any(dict(c.cfg).get("use_pallas") for c in CASES)
+    # the compressed exchange must keep: a none-bitwise column on every
+    # matmul-mix backend (incl. async-τ2), a quantized loop-vs-vmap column
+    # per codec, and a compressed block bit-identity case per scan carry
+    none_backends = {run[0] for c in CASES for run in (c.ref,) + c.cands
+                     if len(run) > 3 and run[3] == "none"}
+    assert {"loop", "vmap", "async"} <= none_backends
+    assert any(dict(c.cfg).get("compress") == "none"
+               or (len(r) > 3 and r[3] == "none")
+               for c in CASES for r in (c.ref,) + c.cands
+               if dict(c.cfg).get("staleness"))
+    comp_modes = {dict(c.cfg).get("compress") for c in CASES}
+    assert {"topk", "int8"} <= comp_modes
+    assert any(dict(c.cfg).get("compress") and c.expect == "exact"
+               and any(r[1] > 1 for r in c.cands) for c in CASES)
+    assert any(dict(c.cfg).get("compress") and dict(c.cfg).get("staleness")
+               for c in CASES)
 
 
 @pytest.mark.fast
