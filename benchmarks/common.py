@@ -128,7 +128,10 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   rounds_per_block: int = 0, staleness: int = 0,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
                   resume: bool = None, use_pallas: bool = None,
-                  compress: str = None, compress_ratio: float = None
+                  compress: str = None, compress_ratio: float = None,
+                  local_steps: int = None, lr: float = None,
+                  weight_decay: float = None, topology: str = None,
+                  min_active: int = None
                   ) -> List[Dict]:
     """``backend`` selects the FederationEngine execution path for every
     figure run ("auto" -> one compiled vmap round program on these
@@ -181,6 +184,12 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
             except ValueError:
                 raise SystemExit("REPRO_BENCH_COMPRESS_RATIO must be a "
                                  f"float, got {raw!r}")
+    # optimizer/topology/participation knobs ride through to ProxyFLConfig
+    # verbatim; None keeps the dataclass default (fedlint FED004 requires
+    # every config field to be settable from this entry point)
+    cfg_extra = {k: v for k, v in dict(
+        local_steps=local_steps, lr=lr, weight_decay=weight_decay,
+        topology=topology, min_active=min_active).items() if v is not None}
     rows = []
     for method in methods:
         # proxy accuracies accumulate across seeds exactly like ``accs``
@@ -203,7 +212,8 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 batch_size=max(1, min(batch_size, mean_n)),
                 seed=seed, dropout_rate=dropout_rate, staleness=staleness,
                 use_pallas=bool(use_pallas),
-                dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip))
+                dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip),
+                **cfg_extra)
             res = run_federated(
                 method, [priv] * n_clients, prox, client_data, test, cfg,
                 seed=seed, eval_every=rounds, backend=backend,

@@ -2,6 +2,17 @@
 # Single CI entry point: tier-1 test suite + headless quickstart example.
 #
 #   scripts/ci.sh             # full tier-1 run (ROADMAP verify command)
+#   scripts/ci.sh --lint      # static analysis, reproduces the CI lint job:
+#                             # fedlint (tools/fedlint — the five engine
+#                             # correctness contracts from docs/INVARIANTS.md:
+#                             # rng-discipline, trace-hygiene, carry-coverage,
+#                             # fingerprint-coverage, kernel-dtype) over
+#                             # src/ + benchmarks/, then the curated ruff
+#                             # baseline (ruff.toml) over the whole tree.
+#                             # ruff is skipped with a banner when not
+#                             # installed (minimal containers); fedlint is
+#                             # stdlib-only and always runs. FEDLINT_FORMAT=
+#                             # github switches to workflow annotations.
 #   scripts/ci.sh --fast      # only tests marked @pytest.mark.fast; includes
 #                             # the fast slice of the cross-backend
 #                             # conformance matrix (tests/test_conformance.py:
@@ -48,7 +59,24 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 # plain strings (not arrays): empty arrays break under `set -u` on bash < 4.4
 MARK=""
 SHARD=""
-if [[ "${1:-}" == "--fast" ]]; then
+if [[ "${1:-}" == "--lint" ]]; then
+  shift
+  echo "== lint: fedlint (engine correctness contracts) =="
+  python -m tools.fedlint src benchmarks --format="${FEDLINT_FORMAT:-text}"
+  if python -c "import ruff" >/dev/null 2>&1 || command -v ruff >/dev/null 2>&1; then
+    echo "== lint: ruff (curated baseline, ruff.toml) =="
+    if [[ "${FEDLINT_FORMAT:-}" == "github" ]]; then
+      ruff check --output-format=github .
+    else
+      ruff check .
+    fi
+  else
+    echo "== lint: ruff NOT installed — SKIPPED (CI runs it; install ruff"
+    echo "   locally to reproduce the full lint job) =="
+  fi
+  echo "CI OK"
+  exit 0
+elif [[ "${1:-}" == "--fast" ]]; then
   MARK="-m fast"
   shift
 elif [[ "${1:-}" == "--smoke" ]]; then

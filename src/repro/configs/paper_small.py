@@ -7,7 +7,7 @@ per-figure benchmarks.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 from .base import DPConfig, ProxyFLConfig

@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..nn.losses import cross_entropy
 
 
 def per_example_losses(apply_fn: Callable, params, x: jnp.ndarray,

@@ -216,6 +216,13 @@ The per-client state is a pytree dict with (at least) ``{"proxy":
 PushSum weight ``w`` and leaves everything else (private model, optimizer
 moments, step counters) client-local — exactly the paper's privacy
 boundary: only proxies ever cross clients.
+
+The conventions this module depends on — the canonical ``round_key``
+schedule, checkpoint coverage of every scan-carry key, config
+fingerprinting, trace hygiene in the round cores — are machine-checked
+contracts: ``docs/INVARIANTS.md`` documents them, ``tools/fedlint``
+enforces them in CI (``scripts/ci.sh --lint``). Extending the engine
+state or the RNG schedule means extending those tables in the same PR.
 """
 from __future__ import annotations
 

@@ -65,9 +65,9 @@ def make_lm_data(
         nxt = jax.random.categorical(k, logits[tok])
         return nxt, nxt
 
-    keys = jax.random.split(ks, n_tokens)
-    first = jax.random.randint(ks, (), 0, vocab)
-    _, toks = jax.lax.scan(step, first, keys)
+    keys = jax.random.split(ks, n_tokens + 1)
+    first = jax.random.randint(keys[0], (), 0, vocab)
+    _, toks = jax.lax.scan(step, first, keys[1:])
     return toks.astype(jnp.int32)
 
 

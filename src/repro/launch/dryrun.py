@@ -29,8 +29,6 @@ Usage::
 
 import argparse
 import json
-import math
-import re
 import sys
 import time
 from typing import Any, Dict, Optional
@@ -44,7 +42,7 @@ from ..configs import INPUT_SHAPES, get_config, list_archs
 from ..configs.base import DPConfig, InputShape, ModelConfig, ProxyFLConfig
 from ..configs.registry import proxy_of
 from .mesh import TPU_V5E, make_production_mesh, mesh_context
-from .sharding import batch_pspecs, cache_pspecs, named, tree_pspecs
+from .sharding import named
 from .steps import (
     StepOptions,
     input_specs,

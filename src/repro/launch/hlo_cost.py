@@ -23,13 +23,11 @@ Two complementary sources:
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Any, Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 # ---------------------------------------------------------------------------
 # jaxpr cost walker

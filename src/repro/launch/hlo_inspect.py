@@ -107,7 +107,7 @@ def main(argv=None) -> int:
     from ..configs.registry import proxy_of
     from .mesh import make_production_mesh, mesh_context
     from .sharding import named
-    from .steps import (StepOptions, input_specs, make_decode_step,
+    from .steps import (input_specs, make_decode_step,
                         make_prefill_step, make_train_step, serve_shardings,
                         serve_state_shapes, train_shardings,
                         train_state_shapes)

@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, list_archs
-from ..configs.base import InputShape
 from ..configs.registry import smoke_variant
 from ..nn.model import init_cache, init_model
 from .steps import StepOptions, make_decode_step, make_prefill_step
@@ -42,21 +41,22 @@ def main(argv=None) -> int:
     if args.smoke:
         cfg = smoke_variant(cfg)
     key = jax.random.PRNGKey(args.seed)
+    key, k_init, k_prompt, k_img, k_first = jax.random.split(key, 5)
     max_len = args.prompt_len + args.gen + (
         cfg.n_image_tokens if cfg.modality == "vlm" else 0)
     opts = StepOptions(remat=False, kv_chunk=max(64, args.prompt_len))
 
-    params = init_model(key, cfg)
+    params = init_model(k_init, cfg)
     cache = init_cache(cfg, args.batch, max_len, dtype=jnp.dtype(cfg.dtype))
     state = {"params": params, "cache": cache}
 
     tok_shape = ((args.batch, args.prompt_len, cfg.n_codebooks)
                  if cfg.modality == "audio" else (args.batch, args.prompt_len))
-    prompt = jax.random.randint(key, tok_shape, 0, cfg.vocab_size)
+    prompt = jax.random.randint(k_prompt, tok_shape, 0, cfg.vocab_size)
     batch = {"tokens": prompt}
     if cfg.modality == "vlm":
         batch["img"] = jax.random.normal(
-            key, (args.batch, cfg.n_image_tokens, cfg.frontend_dim),
+            k_img, (args.batch, cfg.n_image_tokens, cfg.frontend_dim),
             jnp.dtype(cfg.dtype))
 
     prefill = jax.jit(make_prefill_step(cfg, opts))
@@ -75,7 +75,7 @@ def main(argv=None) -> int:
         return jax.random.categorical(k, lg / args.temperature, axis=-1)
 
     pos0 = args.prompt_len + (cfg.n_image_tokens if cfg.modality == "vlm" else 0)
-    tok = sample(key, logits)
+    tok = sample(k_first, logits)
     out = [tok]
     t0 = time.time()
     for i in range(args.gen - 1):

@@ -18,7 +18,6 @@ explored in EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

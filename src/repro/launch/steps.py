@@ -21,22 +21,21 @@ exercised at full scale only through ``.lower().compile()`` with
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, replace
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import InputShape, ModelConfig, ProxyFLConfig
-from ..core.dp import add_gaussian_noise, dp_gradient_chunked, non_dp_gradient
+from ..core.dp import dp_gradient_chunked, non_dp_gradient
 from ..core.gossip import gossip_shift, shard_map_fn
 from ..nn.losses import dml_loss
 from ..nn.model import forward, init_cache, init_model
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
-from .sharding import batch_pspecs, cache_pspecs, tree_pspecs
+from .sharding import batch_pspecs, cache_pspecs
 
 Params = Any
 

@@ -105,6 +105,7 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--weight-decay", type=float, default=1e-4)
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--no-dp", action="store_true")
     ap.add_argument("--sigma", type=float, default=1.0)
@@ -124,6 +125,9 @@ def main(argv=None) -> int:
                          "scans); 0 is bit-identical to the vmap backend")
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client dropout probability (§3.4)")
+    ap.add_argument("--min-active", type=int, default=1,
+                    help="floor on participating clients per round when "
+                         "--dropout-rate > 0")
     ap.add_argument("--rounds-per-block", type=int, default=1,
                     help="rounds fused into one compiled engine round-block "
                          "(vmap backend: the host is re-entered only at "
@@ -172,9 +176,11 @@ def main(argv=None) -> int:
     K = args.clients
     fl = ProxyFLConfig(
         alpha=args.alpha, beta=args.alpha, n_clients=K, rounds=args.rounds,
-        local_steps=args.steps_per_round, lr=args.lr, batch_size=args.batch,
+        local_steps=args.steps_per_round, lr=args.lr,
+        weight_decay=args.weight_decay, batch_size=args.batch,
         topology=args.topology, seed=args.seed,
-        dropout_rate=args.dropout_rate, staleness=args.staleness,
+        dropout_rate=args.dropout_rate, min_active=args.min_active,
+        staleness=args.staleness,
         use_pallas=args.use_pallas, compress=args.compress,
         compress_ratio=args.compress_ratio,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,

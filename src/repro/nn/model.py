@@ -12,7 +12,6 @@ consumes EnCodec token ids [B, S, n_codebooks].
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

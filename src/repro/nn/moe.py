@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, MoEConfig
-from .modules import Params, init_linear, init_mlp, mlp, normal_init
+from .modules import Params, init_mlp, mlp, normal_init
 
 
 def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:

@@ -13,12 +13,12 @@ heterogeneous private architectures (paper Fig. 5b).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .modules import Params, init_linear, linear, normal_init
+from .modules import Params, init_linear, linear
 
 
 @dataclass(frozen=True)

@@ -1,7 +1,6 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see ONE CPU device
 (the 512-device override belongs exclusively to repro.launch.dryrun)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 # `hypothesis` is optional in this container: register the profile only when

@@ -178,6 +178,48 @@ def test_checkpointer_fingerprint_mismatch_refuses(tmp_path, fed_data,
             == config_fingerprint(dataclasses.replace(cfg, rounds=99)))
 
 
+def _perturbed(value):
+    """A same-type value different from ``value`` for any config field."""
+    if dataclasses.is_dataclass(value):
+        return dataclasses.replace(value,
+                                   clip_norm=value.clip_norm + 1.0)
+    if isinstance(value, bool):
+        return not value
+    if isinstance(value, int):
+        return value + 1
+    if isinstance(value, float):
+        return value + 0.25
+    if isinstance(value, str):
+        return value + "_x"
+    if value is None:
+        return 0.5
+    raise TypeError(f"add a perturbation for {type(value)}")
+
+
+@pytest.mark.fast
+def test_fingerprint_covers_every_config_field():
+    """Dynamic twin of fedlint FED004: perturbing ANY non-excluded
+    ProxyFLConfig field must change the fingerprint (a field the hash
+    ignores lets a resume silently continue under a different run), and
+    perturbing an excluded field must NOT (that is what the exclusion
+    claims)."""
+    from repro.checkpoint.federation import DEFAULT_FINGERPRINT_EXCLUDE
+
+    cfg = ProxyFLConfig()
+    base = config_fingerprint(cfg)
+    for f in dataclasses.fields(ProxyFLConfig):
+        mutated = dataclasses.replace(
+            cfg, **{f.name: _perturbed(getattr(cfg, f.name))})
+        fp = config_fingerprint(mutated)
+        if f.name in DEFAULT_FINGERPRINT_EXCLUDE:
+            assert fp == base, (
+                f"excluded field {f.name!r} leaked into the fingerprint")
+        else:
+            assert fp != base, (
+                f"field {f.name!r} is invisible to config_fingerprint — "
+                f"resumes could silently change it")
+
+
 @pytest.mark.fast
 def test_checkpointer_cadence_latest_and_rotation(tmp_path, fed_data,
                                                   mlp_spec):

@@ -3,7 +3,6 @@ variants respect the reduction bounds; layout machinery is consistent."""
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs
-from repro.configs.base import LayerSpec
 from repro.configs.registry import proxy_of, smoke_variant
 
 pytestmark = pytest.mark.fast  # pure-config checks, no compilation

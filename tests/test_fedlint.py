@@ -1,0 +1,317 @@
+"""fedlint's own tests: every rule must FIRE on its bad snippet, stay
+quiet on the good twin, and — the pinned baseline — report zero findings
+on the real tree. The perturbation tests are the acceptance contract:
+adding an unfingerprinted config field or an uncheckpointed scan-carry
+key to a copy of the real sources must produce a finding."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.fedlint import cli  # noqa: E402
+
+
+def lint(root, paths, select=None):
+    findings, errors = cli.run(paths, root=root, select=select)
+    assert not errors, errors
+    return findings
+
+
+def tree(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return tmp_path
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# FED001 rng-discipline
+# ---------------------------------------------------------------------------
+
+def test_rng_whitelist_fires_on_rogue_site(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/rogue.py": (
+        "import jax\n"
+        "def helper():\n"
+        "    return jax.random.PRNGKey(0)\n")})
+    fs = lint(root, ["src"], select=["FED001"])
+    assert len(fs) == 1 and fs[0].rule == "FED001"
+    assert "non-canonical site" in fs[0].message
+    assert fs[0].line == 3
+
+
+def test_rng_whitelist_quiet_on_canonical_site(tmp_path):
+    # the canonical round_key site, at its real path + function name
+    root = tree(tmp_path, {"src/repro/core/engine.py": (
+        "import jax\n"
+        "ROUND_KEY_OFFSET = 10_000\n"
+        "def round_key(base, t):\n"
+        "    return jax.random.fold_in(base, ROUND_KEY_OFFSET + t)\n")})
+    assert lint(root, ["src"], select=["FED001"]) == []
+
+
+def test_rng_double_consume_fires(tmp_path):
+    root = tree(tmp_path, {"src/repro/data/dbl.py": (
+        "import jax\n"
+        "def f(k):\n"
+        "    a = jax.random.normal(k, (2,))\n"
+        "    b = jax.random.uniform(k, (2,))\n"
+        "    return a + b\n")})
+    fs = lint(root, ["src"], select=["FED001"])
+    assert len(fs) == 1 and "already consumed" in fs[0].message
+    assert fs[0].line == 4
+
+
+def test_rng_double_consume_respects_rebind_and_fold_in(tmp_path):
+    root = tree(tmp_path, {"src/repro/data/ok.py": (
+        "import jax\n"
+        "def f(k):\n"
+        "    a = jax.random.normal(k, (2,))\n"
+        "    k = jax.random.fold_in(k, 1)\n"       # derivation, not a draw
+        "    b = jax.random.uniform(k, (2,))\n"    # k was rebound anyway
+        "    return a + b\n")})
+    assert lint(root, ["src"], select=["FED001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# FED002 trace-hygiene
+# ---------------------------------------------------------------------------
+
+BAD_TRACED = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "@jax.jit\n"
+    "def f(x):\n"
+    "    if jnp.sum(x) > 0:\n"
+    "        return x.item()\n"
+    "    return float(x)\n")
+
+
+def test_trace_hygiene_fires_inside_jit(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/badtrace.py": BAD_TRACED})
+    fs = lint(root, ["src"], select=["FED002"])
+    msgs = " | ".join(f.message for f in fs)
+    assert len(fs) == 3
+    assert ".item()" in msgs and "boolifies" in msgs and "float()" in msgs
+
+
+def test_trace_hygiene_quiet_outside_traced_code(tmp_path):
+    # identical body, no @jax.jit and never passed to a transform
+    root = tree(tmp_path, {"src/repro/core/oktrace.py":
+                           BAD_TRACED.replace("@jax.jit\n", "")})
+    assert lint(root, ["src"], select=["FED002"]) == []
+
+
+def test_trace_hygiene_follows_scan_bodies(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/scanbody.py": (
+        "import jax\n"
+        "def body(c, x):\n"
+        "    return c, x.item()\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0, xs)\n")})
+    fs = lint(root, ["src"], select=["FED002"])
+    assert len(fs) == 1 and fs[0].line == 3
+
+
+def test_trace_hygiene_allows_static_argname_coercion(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/staticok.py": (
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, static_argnames=('eps',))\n"
+        "def f(x, eps):\n"
+        "    return x * float(eps)\n")})
+    assert lint(root, ["src"], select=["FED002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# FED003 carry-coverage (perturbs a copy of the REAL engine.py)
+# ---------------------------------------------------------------------------
+
+def engine_tree(tmp_path, extra=""):
+    src = (REPO / "src/repro/core/engine.py").read_text() + extra
+    return tree(tmp_path, {"src/repro/core/engine.py": src})
+
+
+def test_carry_coverage_clean_on_real_engine(tmp_path):
+    root = engine_tree(tmp_path)
+    assert lint(root, ["src"], select=["FED003"]) == []
+
+
+def test_carry_coverage_fires_on_uncheckpointed_key(tmp_path):
+    root = engine_tree(tmp_path, extra=(
+        "\n\ndef _fedlint_probe(base):\n"
+        "    wrapper = {\"clients\": base}\n"
+        "    wrapper[\"never_checkpointed\"] = 1\n"
+        "    return wrapper\n"))
+    fs = lint(root, ["src"], select=["FED003"])
+    assert len(fs) == 2  # missing from BOTH _ckpt_payload and restore_state
+    assert all("never_checkpointed" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# FED004 fingerprint-coverage (perturbs copies of the REAL sources)
+# ---------------------------------------------------------------------------
+
+FP_FILES = ("src/repro/configs/base.py",
+            "src/repro/checkpoint/federation.py",
+            "src/repro/launch/train.py",
+            "benchmarks/common.py")
+
+
+def fp_tree(tmp_path, mutate=None):
+    files = {rel: (REPO / rel).read_text() for rel in FP_FILES}
+    if mutate:
+        rel, old, new = mutate
+        assert old in files[rel]
+        files[rel] = files[rel].replace(old, new, 1)
+    return tree(tmp_path, files)
+
+
+def test_fingerprint_clean_on_real_sources(tmp_path):
+    root = fp_tree(tmp_path)
+    assert lint(root, ["src"], select=["FED004"]) == []
+
+
+def test_fingerprint_fires_on_unthreaded_field(tmp_path):
+    root = fp_tree(tmp_path, mutate=(
+        "src/repro/configs/base.py",
+        "    alpha: float = 0.5",
+        "    debug_knob: int = 0\n    alpha: float = 0.5"))
+    fs = lint(root, ["src"], select=["FED004"])
+    # not settable from either entry point
+    assert len(fs) == 2
+    assert all("debug_knob" in f.message for f in fs)
+
+
+def test_fingerprint_fires_on_uncommented_exclude(tmp_path):
+    root = fp_tree(tmp_path, mutate=(
+        "src/repro/checkpoint/federation.py",
+        "DEFAULT_FINGERPRINT_EXCLUDE = (",
+        "DEFAULT_FINGERPRINT_EXCLUDE = (\n    \"seed\","))
+    fs = lint(root, ["src"], select=["FED004"])
+    assert any("no justifying comment" in f.message for f in fs)
+
+
+def test_fingerprint_fires_on_stale_exclude(tmp_path):
+    root = fp_tree(tmp_path, mutate=(
+        "src/repro/checkpoint/federation.py",
+        "DEFAULT_FINGERPRINT_EXCLUDE = (",
+        "DEFAULT_FINGERPRINT_EXCLUDE = (\n"
+        "    \"not_a_field\",  # bogus\n"))
+    fs = lint(root, ["src"], select=["FED004"])
+    assert any("not a ProxyFLConfig field" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# FED005 kernel-dtype
+# ---------------------------------------------------------------------------
+
+BAD_KERNEL = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "from jax.experimental import pallas as pl\n"
+    "def _bad_kernel(x_ref, y_ref, o_ref):\n"
+    "    o_ref[...] = jnp.dot(x_ref[...], y_ref[...])\n"
+    "def run(x, y, out_shape):\n"
+    "    return pl.pallas_call(_bad_kernel, out_shape=out_shape,\n"
+    "                          interpret=True)(x, y)\n")
+
+GOOD_KERNEL = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "from jax.experimental import pallas as pl\n"
+    "from repro.kernels import resolve_interpret\n"
+    "def _good_kernel(x_ref, y_ref, o_ref):\n"
+    "    acc = jnp.dot(x_ref[...], y_ref[...],\n"
+    "                  preferred_element_type=jnp.float32)\n"
+    "    o_ref[...] = acc.astype(o_ref.dtype)\n"
+    "def run(x, y, out_shape, interpret=None):\n"
+    "    return pl.pallas_call(_good_kernel, out_shape=out_shape,\n"
+    "                          interpret=resolve_interpret(interpret)\n"
+    "                          )(x, y)\n")
+
+
+def test_kernel_dtype_fires_on_bad_kernel(tmp_path):
+    root = tree(tmp_path, {"src/repro/kernels/badk.py": BAD_KERNEL})
+    fs = lint(root, ["src"], select=["FED005"])
+    msgs = " | ".join(f.message for f in fs)
+    assert len(fs) == 2
+    assert "hardcoded interpret" in msgs
+    assert "preferred_element_type" in msgs
+
+
+def test_kernel_dtype_quiet_on_good_kernel(tmp_path):
+    root = tree(tmp_path, {"src/repro/kernels/goodk.py": GOOD_KERNEL})
+    assert lint(root, ["src"], select=["FED005"]) == []
+
+
+def test_kernel_dtype_ignores_non_kernel_paths(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/notkernel.py": BAD_KERNEL})
+    assert lint(root, ["src"], select=["FED005"]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions (driver-level)
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_reason_drops_finding(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/supp.py": (
+        "import jax\n"
+        "def helper():\n"
+        "    # fedlint: disable=FED001 -- fixture demonstrating suppression\n"
+        "    return jax.random.PRNGKey(0)\n")})
+    assert lint(root, ["src"]) == []
+
+
+def test_suppression_without_reason_is_its_own_finding(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/supp.py": (
+        "import jax\n"
+        "def helper():\n"
+        "    return jax.random.PRNGKey(0)  # fedlint: disable=FED001\n")})
+    fs = lint(root, ["src"])
+    assert rules_of(fs) == {"FED000"}
+    assert "mandatory" in fs[0].message
+
+
+def test_suppression_of_unknown_rule_is_flagged(tmp_path):
+    root = tree(tmp_path, {"src/repro/core/supp.py": (
+        "x = 1  # fedlint: disable=FED999 -- typo'd rule id\n")})
+    fs = lint(root, ["src"])
+    assert rules_of(fs) == {"FED000"}
+    assert "unknown rule" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# the pinned baseline + CLI surface
+# ---------------------------------------------------------------------------
+
+def test_real_tree_is_clean():
+    """THE baseline: the shipped tree has zero findings. If a rule change
+    or a source change breaks this, either fix the true positive or
+    extend the config tables/suppressions in the same diff."""
+    assert lint(REPO, ["src", "benchmarks"]) == []
+
+
+def test_cli_exit_codes_and_github_format(tmp_path, capsys):
+    root = tree(tmp_path, {"src/repro/core/rogue.py": (
+        "import jax\n"
+        "k = jax.random.PRNGKey(0)\n")})
+    rc = cli.main(["--root", str(root), "--format=github", "src"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "::error file=src/repro/core/rogue.py,line=2," in out
+    root2 = tree(tmp_path / "clean", {"src/repro/core/empty.py": "x = 1\n"})
+    assert cli.main(["--root", str(root2), "src"]) == 0
+
+
+def test_cli_rejects_unknown_rule_selection(tmp_path):
+    with pytest.raises(SystemExit):
+        cli.run(["src"], root=REPO, select=["FED042"])

@@ -11,8 +11,7 @@ from repro.core.gossip import (adjacency_matrix, adjacency_schedule,
                                comm_cost_per_round, debias,
                                exponential_offsets, gossip_shift, mix_matrix,
                                mix_schedule, pushsum_mix, shift_schedule,
-                               stale_gossip_reference, stale_mix_schedule,
-                               stale_mix_split)
+                               stale_gossip_reference, stale_mix_schedule)
 
 pytestmark = pytest.mark.fast  # host-side graph algebra, no model compiles
 
@@ -390,7 +389,6 @@ def test_distributed_backend_matches_simulation():
     """One gossip round via shard_map/ppermute over a 1-device mesh is only
     runnable for K=1, so emulate K clients with vmap over a stacked axis and
     compare against the matrix backend on the same P^(t)."""
-    from repro.core.gossip import pushsum_gossip_shard
     K, D, t = 4, 7, 1
     k = jax.random.PRNGKey(0)
     thetas = jax.random.normal(k, (K, D))

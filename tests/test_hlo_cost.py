@@ -2,10 +2,9 @@
 collective parser with while-loop multiplier propagation."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import collective_wire_bytes, jaxpr_cost, step_cost
+from repro.launch.hlo_cost import collective_wire_bytes, step_cost
 
 
 def test_dot_flops_exact():

@@ -4,8 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from _hypothesis_compat import given, st
 
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.data.partition import partition_dirichlet, partition_major

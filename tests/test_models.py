@@ -12,8 +12,7 @@ from repro.configs.base import DPConfig, InputShape, ProxyFLConfig
 from repro.configs.registry import proxy_of, smoke_variant
 from repro.launch.steps import (StepOptions, init_serve_state,
                                 init_train_state, input_specs,
-                                make_decode_step, make_prefill_step,
-                                make_train_step)
+                                make_decode_step, make_train_step)
 from repro.nn.model import forward, init_cache, init_model
 
 ARCHS = [a for a in list_archs()]

@@ -3,10 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, st
 
 from repro.core.dp import dp_gradient, dp_gradient_poisson
-from repro.data.loader import expected_batch, poisson_batch
+from repro.data.loader import poisson_batch
 from repro.kernels import ref
 from repro.kernels.rmsnorm import rmsnorm
 

@@ -1,13 +1,12 @@
 """Integration tests of the full ProxyFL protocol and all paper baselines
 at toy scale (synthetic non-IID image data, MLP/CNN clients)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import DPConfig, ProxyFLConfig
 from repro.core.baselines import METHODS, final_mean_acc, run_federated
-from repro.core.protocol import ModelSpec, evaluate
+from repro.core.protocol import ModelSpec
 from repro.data.partition import partition_major
 from repro.data.synthetic import make_classification_data
 from repro.nn.vision import get_vision_model

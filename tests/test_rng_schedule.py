@@ -1,0 +1,87 @@
+"""Runtime twin of fedlint's FED001: the three canonical key domains are
+PAIRWISE DISJOINT over their full operating range.
+
+The schedule (src/repro/core/engine.py, src/repro/core/compress.py):
+
+* per-client init / per-round client streams: ``fold_in(base, k)`` with
+  ``k < ROUND_KEY_OFFSET``,
+* per-round keys: ``round_key(base, t) = fold_in(base,
+  ROUND_KEY_OFFSET + t)``,
+* codec keys: ``compress_round_key(rk) = fold_in(rk,
+  COMPRESS_KEY_FOLD)``.
+
+The static rule pins WHERE keys may be minted; this pins that the minted
+streams never collide — the property a refactor of the 10_000 offset (or
+of COMPRESS_KEY_FOLD) would silently break, correlating "independent"
+client batches with round noise and voiding the DP accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compress import COMPRESS_KEY_FOLD, compress_round_key
+from repro.core.engine import ROUND_KEY_OFFSET, round_key
+
+
+def _key_set(keys):
+    """Set of raw key-data tuples for a batch of vmapped keys."""
+    data = np.asarray(jax.random.key_data(keys))
+    return {tuple(int(v) for v in row) for row in data.reshape(
+        data.shape[0], -1)}
+
+
+def _streams(base, n):
+    ts = jnp.arange(n)
+    per_client = jax.vmap(lambda k: jax.random.fold_in(base, k))(ts)
+    rounds = jax.vmap(lambda t: round_key(base, t))(ts)
+    codec = jax.vmap(compress_round_key)(rounds)
+    return per_client, rounds, codec
+
+
+def test_schedule_constants_pinned():
+    # the contract below is stated FOR these values; moving them is a
+    # conscious schedule change and must retire/extend this test
+    assert ROUND_KEY_OFFSET == 10_000
+    assert COMPRESS_KEY_FOLD == 987_654_321
+    assert COMPRESS_KEY_FOLD > ROUND_KEY_OFFSET * 2
+
+
+def test_streams_pairwise_disjoint_full_range():
+    """t, k sweep the ENTIRE [0, ROUND_KEY_OFFSET) operating range: every
+    per-client stream, every round key, every codec key — no collisions
+    within a stream, none across streams."""
+    base = jax.random.PRNGKey(0)
+    per_client, rounds, codec = _streams(base, ROUND_KEY_OFFSET)
+    s_client, s_round, s_codec = map(_key_set, (per_client, rounds, codec))
+    n = ROUND_KEY_OFFSET
+    assert len(s_client) == len(s_round) == len(s_codec) == n
+    assert not s_client & s_round
+    assert not s_client & s_codec
+    assert not s_round & s_codec
+
+
+def test_streams_disjoint_across_seeds():
+    """The disjointness is not a seed-0 accident, and none of the streams
+    reproduce the base key itself."""
+    for seed in (1, 7, 123):
+        base = jax.random.PRNGKey(seed)
+        per_client, rounds, codec = _streams(base, 512)
+        s_client, s_round, s_codec = map(_key_set,
+                                         (per_client, rounds, codec))
+        assert len(s_client | s_round | s_codec) == 3 * 512
+        base_tup = next(iter(_key_set(jnp.stack([base]))))
+        assert base_tup not in (s_client | s_round | s_codec)
+
+
+def test_round_key_matches_documented_definition():
+    """round_key is DEFINED as fold_in(base, OFFSET + t): the checkpoint
+    format's round addressing depends on this exact equation, so a
+    refactor that preserves disjointness but changes the mapping still
+    breaks resume."""
+    base = jax.random.PRNGKey(3)
+    for t in (0, 1, 999):
+        lhs = jax.random.key_data(round_key(base, t))
+        rhs = jax.random.key_data(
+            jax.random.fold_in(base, ROUND_KEY_OFFSET + t))
+        np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))

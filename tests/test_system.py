@@ -3,8 +3,6 @@ would invoke them, and the dry-run module keeps its device-count contract."""
 import subprocess
 import sys
 
-import pytest
-
 
 def _run(mod, *args, timeout=900):
     return subprocess.run(

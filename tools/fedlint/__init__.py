@@ -1,0 +1,115 @@
+"""fedlint — repo-specific static analysis for the federation engine.
+
+The reproduction's headline guarantees — bit-identical kill/resume at any
+block size or staleness, exact PushSum mass conservation, honest DP
+accounting — rest on a handful of CODE CONVENTIONS: one canonical RNG
+schedule (``round_key``), a hand-maintained checkpoint payload
+(``_ckpt_payload``), a config fingerprint, and an f32-accumulating kernel
+idiom. Conventions rot; this package turns them into machine-checked
+contracts that run in CI (see ``docs/INVARIANTS.md`` for what each rule
+protects and why).
+
+Rules (each documented in ``tools/fedlint/rules/``):
+
+========  ====================  ====================================================
+id        name                  contract
+========  ====================  ====================================================
+FED001    rng-discipline        PRNGKey/split/fold_in only at whitelisted canonical
+                                sites; no key consumed by two random draws in one
+                                scope (kill/resume + DP replay depend on one
+                                deterministic key schedule)
+FED002    trace-hygiene         no host syncs (.item(), np.asarray, float()/int())
+                                or Python ``if`` on tracer values inside lax.scan
+                                bodies / jit-reachable functions
+FED003    carry-coverage        every federation-level scan-carry key next to
+                                "clients" in engine state wrappers must round-trip
+                                through _ckpt_payload AND restore_state
+FED004    fingerprint-coverage  every ProxyFLConfig field is fingerprinted (asdict)
+                                or justified in DEFAULT_FINGERPRINT_EXCLUDE, and is
+                                threaded through (or exempted from) BOTH entry
+                                points: launch/train.py and benchmarks/common.py
+FED005    kernel-dtype          Pallas kernel bodies accumulate in f32
+                                (preferred_element_type) and resolve interpret via
+                                resolve_interpret, never a hardcoded literal
+========  ====================  ====================================================
+
+Suppressions: ``# fedlint: disable=FED001 -- <reason>`` on the offending
+line (or a standalone comment on the line above) silences that rule there.
+The reason is MANDATORY — a bare disable is itself a finding (FED000), so
+every escape hatch is self-documenting in the diff that used it.
+
+Run: ``python -m tools.fedlint src/ --format=github`` (exit 1 on findings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+__all__ = ["Finding", "Rule", "RULES", "register", "all_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file/line."""
+
+    rule: str            # rule id, e.g. "FED001"
+    path: str            # repo-relative path
+    line: int            # 1-based
+    message: str
+    severity: str = "error"   # "error" | "warning"
+
+    def format_text(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.severity}] " \
+               f"{self.message}"
+
+    def format_github(self) -> str:
+        kind = "error" if self.severity == "error" else "warning"
+        # '%0A' etc. not needed: messages are single-line by construction
+        return (f"::{kind} file={self.path},line={self.line},"
+                f"title=fedlint {self.rule}::{self.message}")
+
+
+class Rule:
+    """Base class. ``scope`` selects the driver:
+
+    * ``"file"``  — :meth:`check_module` runs once per linted file,
+    * ``"repo"``  — :meth:`check_repo` runs once per invocation against
+      fixed repo paths (cross-file structural contracts).
+    """
+
+    id: str = "FED000"
+    name: str = "base"
+    scope: str = "file"
+    severity: str = "error"
+
+    def check_module(self, mod) -> List[Finding]:  # pragma: no cover
+        return []
+
+    def check_repo(self, repo) -> List[Finding]:  # pragma: no cover
+        return []
+
+    def finding(self, path: str, line: int, message: str) -> Finding:
+        return Finding(self.id, path, line, message, self.severity)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(rule_cls):
+    """Class decorator: instantiate and add to the global registry."""
+    rule = rule_cls()
+    assert rule.id not in RULES, f"duplicate rule id {rule.id}"
+    RULES[rule.id] = rule
+    return rule_cls
+
+
+def all_rules(select: Optional[List[str]] = None) -> List[Rule]:
+    from . import rules  # noqa: F401  (importing registers everything)
+    out = [RULES[k] for k in sorted(RULES)]
+    if select:
+        wanted = {s.strip() for s in select}
+        unknown = wanted - set(RULES)
+        if unknown:
+            raise SystemExit(f"unknown rule id(s): {sorted(unknown)}")
+        out = [r for r in out if r.id in wanted]
+    return out

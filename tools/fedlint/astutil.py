@@ -1,0 +1,194 @@
+"""Shared AST plumbing for the fedlint rules.
+
+One :class:`ModuleInfo` per parsed file carries:
+
+* the AST with parent links and per-node enclosing-function chains
+  (``func_chain(node)`` -> ("FederationEngine", "_local_phase", "one")),
+* an import-alias table so dotted call names resolve to canonical module
+  paths (``full_call_name``: ``fold_in(...)`` imported via ``from
+  jax.random import fold_in`` resolves to ``"jax.random.fold_in"``),
+* the comment map (line -> comment text) the suppression protocol and the
+  fingerprint rule's justification check read from.
+
+Everything here is stdlib-only (ast + tokenize): fedlint must run in a
+bare CI container before any project dependency is importable.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from typing import Dict, List, Optional, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*fedlint:\s*disable=(?P<rules>[A-Za-z0-9_,\s]+?)"
+    r"(?:\s*--\s*(?P<reason>.*\S))?\s*$")
+
+
+class ModuleInfo:
+    """Parsed module + derived indexes (see module docstring)."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.comments = _comment_map(source)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        self._chains: Dict[ast.AST, Tuple[str, ...]] = {}
+        self.aliases = _alias_table(self.tree)
+        self._index(self.tree, (), None)
+
+    def _index(self, node: ast.AST, chain: Tuple[str, ...],
+               parent: Optional[ast.AST]) -> None:
+        if parent is not None:
+            self.parents[node] = parent
+        self._chains[node] = chain
+        child_chain = chain
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            child_chain = chain + (node.name,)
+        elif isinstance(node, ast.Lambda):
+            child_chain = chain + ("<lambda>",)
+        for child in ast.iter_child_nodes(node):
+            self._index(child, child_chain, node)
+
+    # -- lookups -----------------------------------------------------------
+
+    def func_chain(self, node: ast.AST) -> Tuple[str, ...]:
+        """Names of the functions/classes enclosing ``node``, outermost
+        first (``("FederationEngine", "init_states")``); () at module
+        level."""
+        return self._chains.get(node, ())
+
+    def enclosing_defs(self, node: ast.AST) -> List[ast.AST]:
+        """FunctionDef/AsyncFunctionDef/Lambda nodes enclosing ``node``,
+        innermost LAST."""
+        out: List[ast.AST] = []
+        n = self.parents.get(node)
+        while n is not None:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                out.append(n)
+            n = self.parents.get(n)
+        out.reverse()
+        return out
+
+    def full_call_name(self, func: ast.AST) -> str:
+        """Canonical dotted name of a call target, with the leading import
+        alias expanded (``jrandom.split`` -> ``jax.random.split``); ""
+        when the target is not a plain Name/Attribute chain."""
+        parts: List[str] = []
+        n = func
+        while isinstance(n, ast.Attribute):
+            parts.append(n.attr)
+            n = n.value
+        if not isinstance(n, ast.Name):
+            return ""
+        parts.append(n.id)
+        parts.reverse()
+        head = self.aliases.get(parts[0], parts[0])
+        return ".".join([head] + parts[1:])
+
+    def suppressed(self, rule_id: str, line: int) -> Optional[str]:
+        """The suppression reason when ``rule_id`` is disabled at ``line``
+        (inline comment, or a standalone comment on the line above);
+        "" when disabled WITHOUT a reason; None when not suppressed."""
+        for ln in (line, line - 1):
+            c = self.comments.get(ln)
+            if c is None:
+                continue
+            if ln == line - 1 and not _comment_only_line(self.source, ln):
+                continue  # an inline comment governs its OWN line only
+            m = SUPPRESS_RE.search(c)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            if rule_id in rules or "all" in rules:
+                return m.group("reason") or ""
+        return None
+
+    def bad_suppressions(self) -> List[Tuple[int, str]]:
+        """(line, problem) for every malformed suppression comment:
+        missing mandatory reason, or unknown rule id."""
+        from . import RULES
+        out = []
+        for ln, c in sorted(self.comments.items()):
+            m = SUPPRESS_RE.search(c)
+            if not m:
+                continue
+            rules = [r.strip() for r in m.group("rules").split(",")]
+            if not m.group("reason"):
+                out.append((ln, "suppression is missing its mandatory "
+                                "reason: write '# fedlint: disable=RULE "
+                                "-- <why this site is exempt>'"))
+            for r in rules:
+                if r != "all" and r not in RULES:
+                    out.append((ln, f"suppression names unknown rule "
+                                    f"{r!r}"))
+        return out
+
+
+def _comment_only_line(source: str, line: int) -> bool:
+    lines = source.splitlines()
+    if not (1 <= line <= len(lines)):
+        return False
+    return lines[line - 1].lstrip().startswith("#")
+
+
+def _comment_map(source: str) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenError:  # unterminated something: best effort
+        pass
+    return out
+
+
+def _alias_table(tree: ast.Module) -> Dict[str, str]:
+    """local name -> canonical dotted prefix, from top-level imports
+    (function-local imports are rare enough to ignore here)."""
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                table[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                table[a.asname or a.name] = f"{node.module}.{a.name}"
+    return table
+
+
+def chain_matches(chain: Tuple[str, ...], glob: str) -> bool:
+    """True when the dotted enclosing chain — or any of its prefixes — is
+    matched by ``glob``, so an entry for ``Engine._local_phase*`` also
+    covers the nested defs inside it. ``""`` matches module level only;
+    ``"*"`` matches everything."""
+    import fnmatch
+    if glob == "*":
+        return True
+    if not chain:
+        return glob == ""
+    return any(fnmatch.fnmatchcase(".".join(chain[:i + 1]), glob)
+               for i in range(len(chain)))
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    """The value of a string-constant node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None

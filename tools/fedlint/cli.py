@@ -1,0 +1,153 @@
+"""fedlint driver: collect files, run rules, filter suppressions, report.
+
+``python -m tools.fedlint src/`` from the repo root is the canonical
+invocation; ``--format=github`` makes CI annotate findings in the PR diff.
+Exit status: 0 clean, 1 findings, 2 usage/parse errors.
+
+The driver (not the rules) owns the suppression protocol: after a rule
+emits a finding, a ``# fedlint: disable=<RULE> -- <reason>`` comment on
+the finding's line (or a standalone comment directly above it) drops it.
+A disable comment with no reason, or naming an unknown rule, is itself
+reported as FED000 — and FED000 cannot be suppressed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import Finding, all_rules
+from .astutil import ModuleInfo
+
+# repo root = parent of tools/; overridable for fixture trees in tests
+DEFAULT_ROOT = Path(__file__).resolve().parents[2]
+
+
+class Repo:
+    """Lazy parsed-module cache keyed by repo-relative posix path; the
+    repo-scope rules read fixed paths through this so they can run
+    against fixture trees as well as the real checkout."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        self._cache: Dict[str, Optional[ModuleInfo]] = {}
+
+    def module(self, relpath: str) -> Optional[ModuleInfo]:
+        if relpath not in self._cache:
+            p = self.root / relpath
+            if not p.is_file():
+                self._cache[relpath] = None
+            else:
+                self._cache[relpath] = ModuleInfo(
+                    relpath, p.read_text(encoding="utf-8"))
+        return self._cache[relpath]
+
+
+def _collect(root: Path, paths: Sequence[str]) -> List[str]:
+    """Expand the CLI path operands into sorted repo-relative posix
+    paths of .py files."""
+    out = set()
+    for raw in paths:
+        p = Path(raw)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_dir():
+            out.update(f for f in p.rglob("*.py"))
+        elif p.is_file():
+            out.add(p)
+        else:
+            raise SystemExit(f"fedlint: no such path: {raw}")
+    rels = []
+    for f in sorted(out):
+        try:
+            rels.append(f.resolve().relative_to(root.resolve()).as_posix())
+        except ValueError:
+            rels.append(f.as_posix())
+    return rels
+
+
+def run(paths: Sequence[str], root: Optional[Path] = None,
+        select: Optional[List[str]] = None) -> Tuple[List[Finding], List[str]]:
+    """Lint ``paths`` under ``root``; returns (findings, parse_errors)."""
+    root = Path(root) if root is not None else DEFAULT_ROOT
+    repo = Repo(root)
+    rules = all_rules(select)
+    files = _collect(root, paths)
+    findings: List[Finding] = []
+    errors: List[str] = []
+    mods: Dict[str, ModuleInfo] = {}
+
+    for rel in files:
+        try:
+            mod = ModuleInfo(rel, (root / rel).read_text(encoding="utf-8"))
+        except SyntaxError as e:
+            errors.append(f"{rel}: syntax error: {e}")
+            continue
+        mods[rel] = mod
+        repo._cache[rel] = mod
+        for ln, problem in mod.bad_suppressions():
+            findings.append(Finding("FED000", rel, ln, problem))
+        for rule in rules:
+            if rule.scope == "file":
+                findings.extend(rule.check_module(mod))
+
+    for rule in rules:
+        if rule.scope == "repo":
+            findings.extend(rule.check_repo(repo))
+
+    kept = []
+    for f in findings:
+        if f.rule != "FED000":
+            mod = mods.get(f.path) or repo._cache.get(f.path)
+            if mod is not None and \
+                    mod.suppressed(f.rule, f.line) is not None:
+                continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept, errors
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.fedlint",
+        description="repo-specific static analysis for the federation "
+                    "engine's correctness contracts")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="github emits ::error workflow annotations")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--root", default=None,
+                    help="repo root override (used by the fixture tests)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ns = ap.parse_args(argv)
+
+    if ns.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.name:<22} [{rule.scope}/"
+                  f"{rule.severity}]")
+        return 0
+
+    select = ns.select.split(",") if ns.select else None
+    paths = ns.paths or ["src"]
+    try:
+        findings, errors = run(
+            paths, Path(ns.root) if ns.root else None, select)
+    except SystemExit as e:
+        print(e, file=sys.stderr)
+        return 2
+    for err in errors:
+        print(f"fedlint: {err}", file=sys.stderr)
+    for f in findings:
+        print(f.format_github() if ns.format == "github"
+              else f.format_text())
+    if findings:
+        n_err = sum(1 for f in findings if f.severity == "error")
+        print(f"fedlint: {len(findings)} finding(s) "
+              f"({n_err} error(s))", file=sys.stderr)
+    if errors:
+        return 2
+    return 1 if findings else 0

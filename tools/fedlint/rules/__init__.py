@@ -1,0 +1,9 @@
+"""Importing this package registers every rule (see the ``@register``
+decorator in each module)."""
+from . import (  # noqa: F401
+    carry_coverage,
+    fingerprint_coverage,
+    kernel_dtype,
+    rng_discipline,
+    trace_hygiene,
+)

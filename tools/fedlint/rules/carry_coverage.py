@@ -1,0 +1,115 @@
+"""FED003 carry-coverage — every scan-carry key survives kill/resume.
+
+PRs 5 and 7 each grew the federation-level carried state (``stale_theta``
+/``stale_w`` for the async backend, ``ef_state`` for compression error
+feedback), and each time ``_ckpt_payload``/``restore_state`` had to be
+extended BY HAND. Forgetting that step is silent: training runs fine,
+checkpoints save fine, and a resumed run diverges because part of the
+carry came back zero-initialized. This rule closes the loop structurally:
+
+1. discover the carry keys from ``engine.py`` itself — every string key
+   of a state-wrapper dict (any dict literal carrying ``"clients"``, plus
+   ``state["k"] = ...`` extensions of a wrapper bound to a name),
+2. require every discovered key to be mentioned inside BOTH
+   ``_ckpt_payload`` and ``restore_state``.
+
+A key that genuinely must not be checkpointed goes in
+``CARRY_EXEMPT_KEYS`` (tools/fedlint/config.py) with a why.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .. import Finding, Rule, register
+from ..astutil import ModuleInfo, const_str
+from ..config import CARRY_EXEMPT_KEYS, ENGINE_PATH
+
+
+@register
+class CarryCoverage(Rule):
+    id = "FED003"
+    name = "carry-coverage"
+    scope = "repo"
+
+    def check_repo(self, repo) -> List[Finding]:
+        mod = repo.module(ENGINE_PATH)
+        if mod is None:
+            return []
+        carry = self._carry_keys(mod)
+        if not carry:
+            return [self.finding(
+                ENGINE_PATH, 1,
+                "found no state-wrapper dicts (a dict literal with a "
+                "'clients' key) — if the carry layout was refactored, "
+                "teach tools/fedlint/rules/carry_coverage.py the new "
+                "shape")]
+        out: List[Finding] = []
+        coverage = {}
+        for fname in ("_ckpt_payload", "restore_state"):
+            fn = self._find_def(mod, fname)
+            if fn is None:
+                out.append(self.finding(
+                    ENGINE_PATH, 1,
+                    f"engine.py has no {fname}() — the carry-coverage "
+                    f"contract checks checkpoint round-trips through it"))
+                continue
+            coverage[fname] = {
+                s for n in ast.walk(fn)
+                if (s := const_str(n)) is not None}
+        for key, line in sorted(carry.items(), key=lambda kv: kv[1]):
+            if key in CARRY_EXEMPT_KEYS:
+                continue
+            for fname, strings in coverage.items():
+                if key not in strings:
+                    out.append(self.finding(
+                        ENGINE_PATH, line,
+                        f"scan-carry key {key!r} never appears in "
+                        f"{fname}() — a killed run would resume with "
+                        f"this state zero-initialized; checkpoint it (or "
+                        f"exempt it in CARRY_EXEMPT_KEYS with a why)"))
+        return out
+
+    # -- discovery ---------------------------------------------------------
+
+    @staticmethod
+    def _carry_keys(mod: ModuleInfo) -> Dict[str, int]:
+        """key -> first line it appears as carried state."""
+        keys: Dict[str, int] = {}
+        wrapper_names: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Dict):
+                knames = [const_str(k) for k in node.keys
+                          if k is not None]
+                if "clients" not in knames:
+                    continue
+                for k in node.keys:
+                    s = const_str(k) if k is not None else None
+                    if s is not None:
+                        keys.setdefault(s, k.lineno)
+                parent = mod.parents.get(node)
+                if isinstance(parent, (ast.Assign, ast.AnnAssign)):
+                    targets = parent.targets if isinstance(
+                        parent, ast.Assign) else [parent.target]
+                    for t in targets:
+                        if isinstance(t, ast.Name):
+                            wrapper_names.add(t.id)
+        # state["k"] = ... extensions of a wrapper dict
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Subscript) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id in wrapper_names:
+                        s = const_str(t.slice)
+                        if s is not None:
+                            keys.setdefault(s, t.lineno)
+        return keys
+
+    @staticmethod
+    def _find_def(mod: ModuleInfo, name: str):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == name:
+                return node
+        return None

@@ -1,0 +1,182 @@
+"""FED004 fingerprint-coverage — no config field escapes the fingerprint
+or the entry points.
+
+``config_fingerprint`` is what stops a resume from silently continuing a
+run under a DIFFERENT configuration (a changed ``lr``, a changed DP
+budget). Three structural checks:
+
+* **hash coverage** — ``config_fingerprint`` must hash the full dataclass
+  (``dataclasses.asdict``; new fields are then covered automatically) or,
+  if it ever enumerates fields by hand, name every ``ProxyFLConfig``
+  field explicitly.
+* **justified excludes** — every name in ``DEFAULT_FINGERPRINT_EXCLUDE``
+  must (a) be a real field and (b) carry a comment on its own line
+  saying WHY identity is preserved without it. An exclude is a claim
+  ("resuming with more rounds is the same run"); claims get written down.
+* **entry-point threading** — every field must be settable from both
+  user-facing drivers (``launch/train.py`` and ``benchmarks/common.py``):
+  it must appear as a keyword/attribute there, or be exempted in
+  ``FLAG_EXEMPT_FIELDS`` with a why. This is what makes "added a config
+  field, forgot the flag" a CI failure instead of a silent default.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .. import Finding, Rule, register
+from ..astutil import ModuleInfo, const_str
+from ..config import (
+    CONFIG_PATH,
+    ENTRYPOINT_PATHS,
+    FEDERATION_PATH,
+    FLAG_EXEMPT_FIELDS,
+)
+
+
+@register
+class FingerprintCoverage(Rule):
+    id = "FED004"
+    name = "fingerprint-coverage"
+    scope = "repo"
+
+    def check_repo(self, repo) -> List[Finding]:
+        cfg_mod = repo.module(CONFIG_PATH)
+        fed_mod = repo.module(FEDERATION_PATH)
+        if cfg_mod is None or fed_mod is None:
+            return []
+        fields = self._config_fields(cfg_mod)
+        if not fields:
+            return [self.finding(CONFIG_PATH, 1,
+                                 "could not find ProxyFLConfig fields")]
+        out: List[Finding] = []
+        out.extend(self._check_fingerprint(fed_mod, fields))
+        for entry in ENTRYPOINT_PATHS:
+            out.extend(self._check_entrypoint(repo, entry, fields))
+        return out
+
+    # -- field discovery ---------------------------------------------------
+
+    @staticmethod
+    def _config_fields(mod: ModuleInfo) -> Dict[str, int]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) and \
+                    node.name == "ProxyFLConfig":
+                return {st.target.id: st.lineno for st in node.body
+                        if isinstance(st, ast.AnnAssign)
+                        and isinstance(st.target, ast.Name)}
+        return {}
+
+    # -- fingerprint + exclude list ---------------------------------------
+
+    def _check_fingerprint(self, mod: ModuleInfo,
+                           fields: Dict[str, int]) -> List[Finding]:
+        out: List[Finding] = []
+        fp = self._find_def(mod, "config_fingerprint")
+        if fp is None:
+            return [self.finding(
+                FEDERATION_PATH, 1,
+                "config_fingerprint() not found — the fingerprint "
+                "contract has no anchor")]
+        uses_asdict = any(
+            isinstance(n, ast.Call) and
+            mod.full_call_name(n.func).endswith("asdict")
+            for n in ast.walk(fp))
+        excluded = self._exclude_entries(mod, out, fields)
+        if not uses_asdict:
+            named = {s for n in ast.walk(fp)
+                     if (s := const_str(n)) is not None}
+            for f, line in sorted(fields.items()):
+                if f not in named and f not in excluded:
+                    out.append(self.finding(
+                        FEDERATION_PATH, fp.lineno,
+                        f"config_fingerprint neither asdict()s the "
+                        f"config nor names field {f!r} — an unfingerprinted "
+                        f"field lets a resume silently change the run"))
+        return out
+
+    def _exclude_entries(self, mod: ModuleInfo, out: List[Finding],
+                         fields: Dict[str, int]) -> Set[str]:
+        excluded: Set[str] = set()
+        tup = self._find_assign(mod, "DEFAULT_FINGERPRINT_EXCLUDE")
+        if tup is None:
+            out.append(self.finding(
+                FEDERATION_PATH, 1,
+                "DEFAULT_FINGERPRINT_EXCLUDE not found"))
+            return excluded
+        if not isinstance(tup, (ast.Tuple, ast.List, ast.Set)):
+            return excluded
+        for el in tup.elts:
+            name = const_str(el)
+            if name is None:
+                continue
+            excluded.add(name)
+            if name not in fields:
+                out.append(self.finding(
+                    FEDERATION_PATH, el.lineno,
+                    f"DEFAULT_FINGERPRINT_EXCLUDE names {name!r}, which "
+                    f"is not a ProxyFLConfig field — stale exclude?"))
+            if el.lineno not in mod.comments:
+                out.append(self.finding(
+                    FEDERATION_PATH, el.lineno,
+                    f"excluded field {name!r} has no justifying comment "
+                    f"on its line — say why run identity survives "
+                    f"changing it"))
+        return excluded
+
+    # -- entry-point threading --------------------------------------------
+
+    def _check_entrypoint(self, repo, entry: str,
+                          fields: Dict[str, int]) -> List[Finding]:
+        mod = repo.module(entry)
+        if mod is None:
+            return []
+        settable: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                settable.update(kw.arg for kw in node.keywords
+                                if kw.arg is not None)
+            elif isinstance(node, ast.keyword):
+                pass
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                a = node.args
+                settable.update(p.arg for p in
+                                a.args + a.kwonlyargs + a.posonlyargs)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute):
+                        settable.add(t.attr)
+        out = []
+        for f, line in sorted(fields.items()):
+            if f in settable or f in FLAG_EXEMPT_FIELDS:
+                continue
+            out.append(self.finding(
+                CONFIG_PATH, line,
+                f"ProxyFLConfig.{f} is not threaded through {entry} — "
+                f"users of that entry point can never set it; add the "
+                f"flag/kwarg or exempt it in FLAG_EXEMPT_FIELDS with a "
+                f"why"))
+        return out
+
+    # -- ast helpers -------------------------------------------------------
+
+    @staticmethod
+    def _find_def(mod: ModuleInfo, name: str):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == name:
+                return node
+        return None
+
+    @staticmethod
+    def _find_assign(mod: ModuleInfo, name: str) -> Optional[ast.AST]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == name:
+                        return node.value
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name) and \
+                    node.target.id == name:
+                return node.value
+        return None

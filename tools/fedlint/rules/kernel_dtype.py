@@ -1,0 +1,157 @@
+"""FED005 kernel-dtype — Pallas kernels accumulate in f32 and resolve
+``interpret`` through one switch.
+
+Two invariants from the kernel guide that the conformance tests can only
+probe pointwise:
+
+* every matmul-class op inside a kernel body must pin
+  ``preferred_element_type=jnp.float32`` — on the MXU, a bf16 dot without
+  it accumulates in bf16 and the PushSum mass-conservation error grows
+  with n_clients; narrowing back to the output dtype happens once, at the
+  ``o_ref[...] =`` store.
+* ``pl.pallas_call(..., interpret=...)`` must flow through
+  ``resolve_interpret`` — a hardcoded literal either silently runs the
+  interpreter on TPU (orders of magnitude slower) or breaks CPU CI, and
+  cannot be toggled by ``REPRO_PALLAS_INTERPRET``.
+
+Kernel bodies are found structurally: the function passed (directly or
+via ``functools.partial``) as the first argument to ``pallas_call``, plus
+any def whose name ends in ``_kernel``.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import List, Set
+
+from .. import Finding, Rule, register
+from ..astutil import ModuleInfo, keyword_arg
+from ..config import KERNELS_GLOB
+
+_DOT_OPS = {
+    "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.einsum",
+    "jax.lax.dot", "jax.lax.dot_general",
+    "jax.experimental.pallas.dot",
+}
+
+
+@register
+class KernelDtype(Rule):
+    id = "FED005"
+    name = "kernel-dtype"
+    scope = "file"
+
+    def check_module(self, mod: ModuleInfo) -> List[Finding]:
+        if not fnmatch.fnmatchcase(mod.path, KERNELS_GLOB):
+            return []
+        out: List[Finding] = []
+        kernel_defs = self._kernel_defs(mod)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    mod.full_call_name(node.func).split(".")[-1] == \
+                    "pallas_call":
+                out.extend(self._check_interpret(mod, node))
+        for kd in kernel_defs:
+            out.extend(self._check_accum(mod, kd))
+        return out
+
+    # -- interpret resolution ---------------------------------------------
+
+    def _check_interpret(self, mod: ModuleInfo,
+                         call: ast.Call) -> List[Finding]:
+        val = keyword_arg(call, "interpret")
+        if val is None:
+            return [self.finding(
+                mod.path, call.lineno,
+                "pallas_call without interpret=resolve_interpret(...): "
+                "the platform/env switch (REPRO_PALLAS_INTERPRET) must "
+                "decide interpreter mode, not the call site")]
+        if isinstance(val, ast.Constant):
+            return [self.finding(
+                mod.path, val.lineno,
+                f"hardcoded interpret={val.value!r}: wrap it as "
+                f"interpret=resolve_interpret(interpret) so CPU CI and "
+                f"TPU runs share one switch")]
+        if self._is_resolved(mod, val, call):
+            return []
+        return [self.finding(
+            mod.path, val.lineno,
+            "interpret= is not routed through resolve_interpret(); pass "
+            "interpret=resolve_interpret(interpret)")]
+
+    def _is_resolved(self, mod: ModuleInfo, val: ast.AST,
+                     call: ast.Call) -> bool:
+        if isinstance(val, ast.Call) and \
+                mod.full_call_name(val.func).split(".")[-1] == \
+                "resolve_interpret":
+            return True
+        if isinstance(val, ast.Name):
+            # a local `interp = resolve_interpret(...)` upstream counts
+            for d in mod.enclosing_defs(call):
+                for n in ast.walk(d):
+                    if isinstance(n, ast.Assign) and \
+                            isinstance(n.value, ast.Call) and \
+                            mod.full_call_name(
+                                n.value.func).split(".")[-1] == \
+                            "resolve_interpret" and \
+                            any(isinstance(t, ast.Name) and t.id == val.id
+                                for t in n.targets):
+                        return True
+        return False
+
+    # -- f32 accumulation --------------------------------------------------
+
+    def _kernel_defs(self, mod: ModuleInfo) -> List[ast.AST]:
+        names: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and
+                    mod.full_call_name(node.func).split(".")[-1] ==
+                    "pallas_call" and node.args):
+                continue
+            body = node.args[0]
+            if isinstance(body, ast.Call) and body.args:
+                # functools.partial(kernel, ...) indirection
+                body = body.args[0] if not isinstance(
+                    body.func, ast.Name) or body.func.id == "partial" \
+                    else body.func
+            if isinstance(body, ast.Name):
+                names.add(body.id)
+        out = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and (node.name in names or
+                         node.name.endswith("_kernel")):
+                out.append(node)
+        return out
+
+    def _check_accum(self, mod: ModuleInfo, kdef) -> List[Finding]:
+        out = []
+        for node in ast.walk(kdef):
+            if not (isinstance(node, ast.Call) and
+                    mod.full_call_name(node.func) in _DOT_OPS):
+                continue
+            pet = keyword_arg(node, "preferred_element_type")
+            if pet is None:
+                out.append(self.finding(
+                    mod.path, node.lineno,
+                    f"{mod.full_call_name(node.func)} inside kernel "
+                    f"{kdef.name!r} without preferred_element_type="
+                    f"jnp.float32 — bf16 inputs would accumulate in "
+                    f"bf16 and break mass conservation"))
+            elif not self._is_f32(pet):
+                out.append(self.finding(
+                    mod.path, pet.lineno,
+                    f"kernel {kdef.name!r} accumulates in a non-f32 "
+                    f"preferred_element_type; accumulate in f32 and "
+                    f"narrow once at the o_ref store"))
+        return out
+
+    @staticmethod
+    def _is_f32(node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute):
+            return node.attr == "float32"
+        if isinstance(node, ast.Constant):
+            return node.value == "float32"
+        if isinstance(node, ast.Name):
+            return node.id == "float32"
+        return False

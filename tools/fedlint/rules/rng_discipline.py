@@ -1,0 +1,178 @@
+"""FED001 rng-discipline — one canonical, whitelisted RNG schedule.
+
+Bit-identical kill/resume (and the DP accountant's claim that each noise
+draw happens exactly once) require every random stream in the repo to be
+derivable from the run's base key through the canonical helpers:
+``round_key(base, t)``, ``compress_round_key(rk)`` and per-client
+``fold_in(key, k)``. Two checks enforce that:
+
+* **whitelist** — ``jax.random.PRNGKey/key/split/fold_in`` may only
+  appear at the sites enumerated in ``tools/fedlint/config.py``
+  (each with a mandatory why). A new call site is a finding until it is
+  either rewritten against the canonical helpers or consciously added to
+  the table in the same diff.
+* **double-consume** — the same key variable must not feed two random
+  primitives in one straight-line scope (``split(ks, n)`` followed by
+  ``randint(ks, ...)`` silently correlates "independent" streams).
+  ``fold_in`` is exempt as a consumer: deriving many streams from one
+  parent key is exactly its job.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Dict, List
+
+from .. import Finding, Rule, register
+from ..astutil import ModuleInfo, chain_matches
+from ..config import RNG_ALLOWED_SITES
+
+# canonical full name -> short primitive name used by the Allow table
+_GATED = {
+    "jax.random.PRNGKey": "PRNGKey",
+    "jax.random.key": "key",
+    "jax.random.split": "split",
+    "jax.random.fold_in": "fold_in",
+}
+
+# jax.random calls that CONSUME their key argument (everything except the
+# derivation primitives — a key may be folded many times, never drawn
+# from twice)
+_NON_CONSUMERS = {"PRNGKey", "key", "fold_in", "wrap_key_data",
+                  "key_data", "key_impl", "clone"}
+
+
+@register
+class RngDiscipline(Rule):
+    id = "FED001"
+    name = "rng-discipline"
+    scope = "file"
+
+    def check_module(self, mod: ModuleInfo) -> List[Finding]:
+        out: List[Finding] = []
+        out.extend(self._whitelist(mod))
+        out.extend(self._double_consume(mod))
+        return out
+
+    # -- whitelist ---------------------------------------------------------
+
+    def _whitelist(self, mod: ModuleInfo) -> List[Finding]:
+        out = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            prim = _GATED.get(mod.full_call_name(node.func))
+            if prim is None:
+                continue
+            chain = mod.func_chain(node)
+            if any(fnmatch.fnmatchcase(mod.path, a.path)
+                   and chain_matches(chain, a.func)
+                   and prim in a.prims
+                   for a in RNG_ALLOWED_SITES):
+                continue
+            where = ".".join(chain) or "<module>"
+            out.append(self.finding(
+                mod.path, node.lineno,
+                f"jax.random.{prim} in non-canonical site {where!r}: "
+                f"derive keys via round_key/compress_round_key/"
+                f"fold_in(key, k), or add this site to RNG_ALLOWED_SITES "
+                f"in tools/fedlint/config.py with a why"))
+        return out
+
+    # -- double-consume ----------------------------------------------------
+
+    def _double_consume(self, mod: ModuleInfo) -> List[Finding]:
+        out: List[Finding] = []
+        scopes = [mod.tree] + [
+            n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for scope in scopes:
+            self._scan_block(mod, list(scope.body), {}, out)
+        return out
+
+    def _scan_block(self, mod: ModuleInfo, stmts: List[ast.stmt],
+                    consumed: Dict[str, int], out: List[Finding]) -> None:
+        """Linear source-order scan with assignment kill and a
+        conservative union merge across branches."""
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue  # nested scopes scanned on their own
+            if isinstance(st, ast.If):
+                self._scan_exprs(mod, st.test, consumed, out)
+                merged: Dict[str, int] = {}
+                for branch in (st.body, st.orelse):
+                    state = dict(consumed)
+                    self._scan_block(mod, branch, state, out)
+                    merged.update(state)
+                consumed.clear()
+                consumed.update(merged)
+                continue
+            if isinstance(st, ast.Try):
+                merged = {}
+                branches = [st.body] + [h.body for h in st.handlers] + \
+                    [st.orelse, st.finalbody]
+                for branch in branches:
+                    state = dict(consumed)
+                    self._scan_block(mod, branch, state, out)
+                    merged.update(state)
+                consumed.clear()
+                consumed.update(merged)
+                continue
+            if isinstance(st, (ast.For, ast.AsyncFor, ast.While)):
+                # straight-line view of one iteration; cross-iteration
+                # reuse is covered because an un-rebound key consumed in
+                # the body stays marked for the statements after the loop
+                if isinstance(st, ast.While):
+                    self._scan_exprs(mod, st.test, consumed, out)
+                else:
+                    self._scan_exprs(mod, st.iter, consumed, out)
+                    self._kill_target(st.target, consumed)
+                self._scan_block(mod, st.body, consumed, out)
+                self._scan_block(mod, st.orelse, consumed, out)
+                continue
+            if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                if st.value is not None:
+                    self._scan_exprs(mod, st.value, consumed, out)
+                targets = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for t in targets:
+                    self._kill_target(t, consumed)
+                continue
+            if isinstance(st, ast.With):
+                for item in st.items:
+                    self._scan_exprs(mod, item.context_expr, consumed, out)
+                self._scan_block(mod, st.body, consumed, out)
+                continue
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self._scan_exprs(mod, child, consumed, out)
+
+    def _scan_exprs(self, mod: ModuleInfo, expr: ast.AST,
+                    consumed: Dict[str, int], out: List[Finding]) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            full = mod.full_call_name(node.func)
+            if not full.startswith("jax.random."):
+                continue
+            if full.rsplit(".", 1)[1] in _NON_CONSUMERS:
+                continue
+            arg = node.args[0]
+            if not isinstance(arg, ast.Name):
+                continue
+            prev = consumed.get(arg.id)
+            if prev is not None:
+                out.append(self.finding(
+                    mod.path, node.lineno,
+                    f"key {arg.id!r} already consumed by a random "
+                    f"primitive at line {prev}; split it first — reusing "
+                    f"a key correlates streams that must be independent"))
+            else:
+                consumed[arg.id] = node.lineno
+
+    @staticmethod
+    def _kill_target(target: ast.AST, consumed: Dict[str, int]) -> None:
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                consumed.pop(n.id, None)
