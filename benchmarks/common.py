@@ -126,6 +126,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   n_train_factor: float = 1.0,
                   backend: str = None, dropout_rate: float = 0.0,
                   rounds_per_block: int = 0, staleness: int = 0,
+                  n_shards: int = 0,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
                   resume: bool = None, use_pallas: bool = None,
                   compress: str = None, compress_ratio: float = None,
@@ -140,9 +141,12 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     (env ``REPRO_BENCH_BLOCK``) fuses that many rounds into one compiled
     engine round-block — bit-identical results, fewer host round-trips; 0/1
     keep the historical per-round execution. ``staleness`` (env
-    ``REPRO_BENCH_STALENESS``) sets the gossip delay τ of the async
-    backend (only meaningful with ``backend="async"``; τ=0 reproduces the
-    vmap backend bit-identically).
+    ``REPRO_BENCH_STALENESS``) sets the gossip delay τ of the async and
+    hier backends (τ=0 reproduces the vmap backend bit-identically; with
+    hier only the cross-shard edges are delayed). ``n_shards`` (env
+    ``REPRO_BENCH_SHARDS``) sets the two-level cohort layout of the hier
+    backend — n_shards shards mixing block-diagonally on device plus at
+    most one sparse cross-shard edge per client per round.
 
     ``checkpoint_dir`` makes every (method, seed) run snapshot its complete
     federation state every ``checkpoint_every`` rounds under
@@ -161,13 +165,19 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
     rounds_per_block = rounds_per_block or _env_int("REPRO_BENCH_BLOCK") or 1
     staleness = staleness or _env_int("REPRO_BENCH_STALENESS")
-    if staleness and backend != "async":
+    n_shards = n_shards or _env_int("REPRO_BENCH_SHARDS")
+    if staleness and backend not in ("async", "hier"):
         # same guard as train.py: a silently-ignored τ would let a sweep
         # report synchronous results as stale-gossip measurements
         raise SystemExit(
-            f"staleness={staleness} requires backend='async' "
+            f"staleness={staleness} requires backend='async' or 'hier' "
             f"(got {backend!r}; the synchronous backends deliver every "
             "round) — set REPRO_BENCH_BACKEND=async")
+    if n_shards > 1 and backend != "hier":
+        raise SystemExit(
+            f"n_shards={n_shards} requires backend='hier' "
+            f"(got {backend!r}; the flat backends have no shard level) "
+            "— set REPRO_BENCH_BACKEND=hier")
     checkpoint_dir = checkpoint_dir or os.environ.get("REPRO_BENCH_CKPT_DIR")
     checkpoint_every = checkpoint_every or _env_int("REPRO_BENCH_CKPT_EVERY")
     if resume is None:
@@ -211,6 +221,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 alpha=alpha, beta=alpha, n_clients=n_clients, rounds=rounds,
                 batch_size=max(1, min(batch_size, mean_n)),
                 seed=seed, dropout_rate=dropout_rate, staleness=staleness,
+                n_shards=n_shards or 1,
                 use_pallas=bool(use_pallas),
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip),
                 **cfg_extra)

@@ -15,34 +15,51 @@ import time
 
 from . import (fig3_accuracy, fig4_comm, fig5_ablations, fig6_kvasir,
                fig11_batchsize, fig_async, fig_blocks, fig_compress,
-               fig_dropout, fig_kernels, fig_ragged, mia_privacy, roofline,
-               table2_histo)
+               fig_dropout, fig_hier, fig_kernels, fig_ragged, mia_privacy,
+               roofline, table2_histo)
 
-# name -> (module, paper anchor). The one-line description shown by
-# ``--list`` is each module's own docstring first line, so registry and
-# docs cannot drift apart; tests assert every fig_* file on disk is here.
+# name -> (module, paper anchor, runtime tier). The one-line description
+# shown by ``--list`` is each module's own docstring first line, so
+# registry and docs cannot drift apart; tests assert every fig_* file on
+# disk is here. The TIER is the CI contract: "fast" figures finish in CPU
+# minutes at default settings and are run by the non-gating baseline step
+# (scripts/bench_baseline.py selects them FROM THIS FIELD — CI never
+# hard-codes module names); "full" figures are accuracy sweeps that only
+# make sense at paper scale.
 MODULES = {
-    "fig3_accuracy": (fig3_accuracy, "Fig. 3 / Fig. 9"),
-    "fig4_comm": (fig4_comm, "Fig. 4 / Fig. 13"),
-    "fig5_ablations": (fig5_ablations, "Fig. 5 a-c / Fig. 12"),
-    "fig6_kvasir": (fig6_kvasir, "Fig. 6"),
-    "table2_histo": (table2_histo, "Fig. 8 / Table 2"),
-    "fig11_batchsize": (fig11_batchsize, "Fig. 11"),
-    "fig_ragged": (fig_ragged, "beyond-paper"),
-    "fig_blocks": (fig_blocks, "beyond-paper"),
-    "fig_kernels": (fig_kernels, "beyond-paper"),
-    "fig_compress": (fig_compress, "beyond-paper"),
-    "fig_async": (fig_async, "beyond-paper"),
-    "fig_dropout": (fig_dropout, "paper §3.4"),
-    "mia_privacy": (mia_privacy, "beyond-paper"),
-    "roofline": (roofline, "§Roofline"),
+    "fig3_accuracy": (fig3_accuracy, "Fig. 3 / Fig. 9", "full"),
+    "fig4_comm": (fig4_comm, "Fig. 4 / Fig. 13", "full"),
+    "fig5_ablations": (fig5_ablations, "Fig. 5 a-c / Fig. 12", "full"),
+    "fig6_kvasir": (fig6_kvasir, "Fig. 6", "full"),
+    "table2_histo": (table2_histo, "Fig. 8 / Table 2", "full"),
+    "fig11_batchsize": (fig11_batchsize, "Fig. 11", "full"),
+    "fig_ragged": (fig_ragged, "beyond-paper", "full"),
+    "fig_blocks": (fig_blocks, "beyond-paper", "fast"),
+    "fig_kernels": (fig_kernels, "beyond-paper", "fast"),
+    "fig_hier": (fig_hier, "beyond-paper", "fast"),
+    "fig_compress": (fig_compress, "beyond-paper", "full"),
+    "fig_async": (fig_async, "beyond-paper", "full"),
+    "fig_dropout": (fig_dropout, "paper §3.4", "full"),
+    "mia_privacy": (mia_privacy, "beyond-paper", "full"),
+    "roofline": (roofline, "§Roofline", "full"),
 }
+
+TIERS = ("fast", "full")
+
+
+def names_for_tier(tier: str) -> list:
+    """Registry names whose runtime tier is ``tier`` — the programmatic
+    hook CI slices use instead of hard-coding module names."""
+    if tier not in TIERS:
+        raise ValueError(f"unknown tier {tier!r}; expected one of {TIERS}")
+    return [n for n, (_, _, t) in MODULES.items() if t == tier]
 
 
 def _describe(name: str) -> str:
-    mod, anchor = MODULES[name]
+    mod, anchor, tier = MODULES[name]
     first = (mod.__doc__ or "").strip().splitlines()
-    return f"{name}: [{anchor}] {first[0] if first else '(no docstring)'}"
+    return (f"{name}: [{anchor}] ({tier}) "
+            f"{first[0] if first else '(no docstring)'}")
 
 
 def list_benchmarks() -> list:
@@ -56,7 +73,10 @@ def main(argv=None) -> int:
                     help="comma-separated subset of benchmark names")
     ap.add_argument("--list", action="store_true",
                     help="print every registered benchmark with its "
-                         "one-line description and exit")
+                         "one-line description and runtime tier, and exit")
+    ap.add_argument("--tier", choices=TIERS, default="",
+                    help="run only benchmarks of this runtime tier (CI's "
+                         "non-gating baseline step uses --tier fast)")
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     args = ap.parse_args(argv)
     if args.list:
@@ -64,6 +84,9 @@ def main(argv=None) -> int:
             print(line)
         return 0
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(MODULES)
+    if args.tier:
+        allowed = set(names_for_tier(args.tier))
+        names = [n for n in names if n in allowed]
 
     failures = 0
     for name in names:

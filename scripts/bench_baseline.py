@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Non-gating CI performance baseline.
+
+Runs the FAST-tier benchmark figures — selected from the
+``benchmarks.run.MODULES`` registry's tier field, never hard-coded — at
+their default CPU-budget settings and writes one schema-stable JSON
+artifact, ``BENCH_9.json`` at the repo root, so CI can archive a
+throughput baseline per commit without gating merges on wall-clock
+numbers (shared runners make timing assertions flaky by construction).
+
+Schema (stable across figures; every row carries every key)::
+
+    {"schema": 1, "tier": "fast", "figures": [...], "rows": [
+        {"figure": str, "K": int, "backend": str,
+         "rounds_per_sec": float | null, "bytes_per_round": float | null},
+    ]}
+
+``bytes_per_round`` is each figure's own bytes column: the exchange
+bytes-moved model for fig_kernels, the per-client cross-shard wire bytes
+for fig_hier (the O(1)-in-K claim), absent (null) for fig_blocks.
+
+Usage::
+
+    PYTHONPATH=src python scripts/bench_baseline.py           # all fast tier
+    PYTHONPATH=src python scripts/bench_baseline.py fig_hier  # subset
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [os.path.join(REPO, "src"), REPO]
+
+OUT = os.path.join(REPO, "BENCH_9.json")
+
+
+def _normalize(figure: str, row: dict) -> dict:
+    """One row of any fast-tier figure → the stable schema."""
+    backend = row.get("backend", "vmap")
+    if figure == "fig_kernels":
+        # fig_kernels times the vmap backend's plain vs Pallas-fused path
+        backend = f"vmap-{row.get('path', 'plain')}"
+    elif figure == "fig_hier" and backend == "hier":
+        backend = f"hier-s{row.get('n_shards')}-t{row.get('staleness')}"
+    bytes_per_round = None
+    for k in ("bytes_per_round", "exchange_bytes_per_round",
+              "bytes_cross_per_client"):
+        if row.get(k) is not None:
+            bytes_per_round = float(row[k])
+            break
+    return {
+        "figure": figure,
+        "K": int(row.get("K", row.get("clients", 0))),
+        "backend": backend,
+        "rounds_per_sec": (float(row["rounds_per_sec"])
+                           if row.get("rounds_per_sec") is not None else None),
+        "bytes_per_round": bytes_per_round,
+    }
+
+
+def main(argv=None) -> int:
+    from benchmarks.run import MODULES, names_for_tier
+
+    only = list(argv if argv is not None else sys.argv[1:])
+    names = names_for_tier("fast")
+    if only:
+        unknown = set(only) - set(names)
+        if unknown:
+            raise SystemExit(f"not fast-tier figures: {sorted(unknown)} "
+                             f"(fast tier: {names})")
+        names = [n for n in names if n in only]
+
+    # keep the figures' own per-run JSON artifacts out of the repo root
+    res_dir = os.path.join(REPO, "results")
+    os.makedirs(res_dir, exist_ok=True)
+    os.environ.setdefault("REPRO_BENCH_BLOCKS_JSON",
+                          os.path.join(res_dir, "fig_blocks.json"))
+    os.environ.setdefault("REPRO_BENCH_KERNELS_JSON",
+                          os.path.join(res_dir, "fig_kernels.json"))
+
+    rows = []
+    for name in names:
+        mod = MODULES[name][0]
+        print(f"[bench_baseline] running {name} ...", flush=True)
+        for r in mod.run(False):
+            rows.append(_normalize(name, r))
+    artifact = {"schema": 1, "tier": "fast", "figures": names, "rows": rows}
+    with open(OUT, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(f"[bench_baseline] {len(rows)} rows from {len(names)} figures "
+          f"-> {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,12 @@ With τ=2 every post-resume round consumes proxy mass recorded BEFORE the
 kill, so bit-identity here proves the τ-deep in-flight buffer round-trips
 through the checkpoint exactly.
 
+The HIER (two-level) backend gets the same mid-block treatment at
+staleness τ=2 and n_shards=2: post-resume rounds consume CROSS-SHARD
+deliveries recorded before the kill, so bit-identity proves the
+``hier_buffer``/``hier_w`` carry pair round-trips through the checkpoint
+exactly (the FED003 carry-coverage contract, exercised end to end).
+
     PYTHONPATH=src python scripts/resume_smoke.py
 """
 import dataclasses
@@ -158,6 +164,40 @@ def run_async_stale() -> None:
           "is bit-identical (in-flight buffer restored from the snapshot)")
 
 
+def run_hier_stale() -> None:
+    """The hier twin of :func:`run_async_stale`: a staleness-2, n_shards=2
+    two-level federation fused into ONE 6-round block is killed at round 4
+    (a checkpoint edge cutting the block structure) and resumed. Rounds
+    5-6 mix cross-shard sends recorded at rounds 3-4 — delivery mass that
+    only exists if the hier in-flight pair (``hier_buffer``/``hier_w``)
+    was restored from the snapshot. Must match the uninterrupted
+    reference bit-for-bit (params AND epsilon)."""
+    spec, data, test, cfg = build_federation()
+    cfg = dataclasses.replace(cfg, rounds=6, staleness=2, n_shards=2)
+    run = lambda c, B, **kw: run_federated(
+        "proxyfl", [spec] * K, spec, data, test, c, seed=0,
+        eval_every=c.rounds, backend="hier", rounds_per_block=B, **kw)
+    reference = run(cfg, cfg.rounds)  # whole horizon: ONE compiled block
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = dict(checkpoint_dir=d, checkpoint_every=2)
+        run(dataclasses.replace(cfg, rounds=4), cfg.rounds, **ckpt)  # killed
+        resumed = run(cfg, cfg.rounds, resume=True, **ckpt)
+
+    failures = []
+    for role in ("proxy_params", "private_params"):
+        if not np.array_equal(flat(reference, role), flat(resumed, role)):
+            failures.append(f"{role} differ after hier-stale resume")
+    if reference["epsilon"] != resumed["epsilon"]:
+        failures.append(f"epsilon differs: {reference['epsilon']} != "
+                        f"{resumed['epsilon']}")
+    if failures:
+        raise SystemExit("[resume-smoke:hier-t2] FAIL: "
+                         + "; ".join(failures))
+    print("[resume-smoke:hier-t2] OK — two-level staleness-2 kill-mid-block "
+          "resume is bit-identical (cross-shard buffer restored from the "
+          "snapshot)")
+
+
 def main() -> int:
     finals = {b: run_backend(b) for b in ("vmap", "loop")}
     np.testing.assert_allclose(finals["vmap"], finals["loop"],
@@ -166,6 +206,7 @@ def main() -> int:
     print("[resume-smoke] OK — loop and vmap resumed trajectories agree")
     run_blocked()
     run_async_stale()
+    run_hier_stale()
     return 0
 
 

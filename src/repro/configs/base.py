@@ -239,14 +239,24 @@ class ProxyFLConfig:
     dropout_rate: float = 0.0
     min_active: int = 1  # floor on participating clients per round
     # Federation execution backend:
-    # "auto" | "loop" | "vmap" | "shard_map" | "async"
+    # "auto" | "loop" | "vmap" | "shard_map" | "async" | "hier"
     # (see repro.core.engine.FederationEngine for the selection guide).
     backend: str = "auto"
     # Gossip staleness τ for backend="async": the round-t exchange delivers
     # neighbor proxy mass captured τ rounds earlier (in-flight until then),
     # modeling communication overlapped with the local scan (Assran et al.
     # 2019). 0 = synchronous delivery — bit-identical to the vmap backend.
+    # For backend="hier" τ delays the CROSS-SHARD edges only (intra-shard
+    # exchange stays synchronous).
     staleness: int = 0
+    # Two-level cohort layout for backend="hier": n_shards shards of
+    # n_clients/n_shards clients each (must divide evenly). Intra-shard
+    # exchange is the on-device matmul mix; the at-most-one cross-shard
+    # edge per client per round is the ppermute-shaped collective.
+    # n_shards=1 keeps every edge intra-shard — the engine then runs the
+    # vmap round programs verbatim (bit-identical). Ignored by the other
+    # backends.
+    n_shards: int = 1
     # Pallas-fused round hot path: run the PushSum exchange and the DP
     # clip→noise→step chain as blocked HBM→VMEM kernels (repro.kernels) —
     # real Mosaic kernels on TPU, interpret mode elsewhere. Numerics are

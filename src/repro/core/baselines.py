@@ -23,17 +23,21 @@ executed in engine-owned ROUND-BLOCKS (``_drive_blocks``: up to
 ``rounds_per_block`` rounds fused into one compiled program, host re-
 entered only at block edges, eval/checkpoint cadences cut to block edges
 — bit-identical to per-round execution at any block size). The engine
-``backend`` ("loop" | "vmap" | "shard_map" | "async") is selectable per
-call or via ``ProxyFLConfig.backend``; "auto" compiles the whole round
-into one XLA program (vmap) whenever the cohort is homogeneous — ragged
-(size-skewed, e.g. Dirichlet-partitioned) datasets included, via padding
-+ masked sampling — and falls back to the per-client loop only for
+``backend`` ("loop" | "vmap" | "shard_map" | "async" | "hier") is
+selectable per call or via ``ProxyFLConfig.backend``; "auto" compiles the
+whole round into one XLA program (vmap) whenever the cohort is homogeneous
+— ragged (size-skewed, e.g. Dirichlet-partitioned) datasets included, via
+padding + masked sampling — and falls back to the per-client loop only for
 heterogeneous architectures or genuinely incompatible data trees.
 ``backend="async"`` swaps the synchronous exchange for staleness-τ gossip
 (``ProxyFLConfig.staleness``; τ=0 is bit-identical to vmap, τ>0 delivers
 neighbor proxies τ rounds late — see the async section of
-``repro.core.engine``). ``ProxyFLConfig.dropout_rate`` makes clients drop
-in/out per round (§3.4) on every backend.
+``repro.core.engine``). ``backend="hier"`` runs the two-level
+[``ProxyFLConfig.n_shards`` × clients-per-shard] factored exchange (same
+flat P^(t), executed block-diagonally; τ delays cross-shard edges only —
+see the hier section of ``repro.core.engine``).
+``ProxyFLConfig.dropout_rate`` makes clients drop in/out per round (§3.4)
+on every backend.
 """
 from __future__ import annotations
 
@@ -79,12 +83,14 @@ def _resolve_backend(backend, cfg: ProxyFLConfig, client_data) -> str:
     backend = backend or cfg.backend or "auto"
     if backend == "auto" and not pad_compatible(client_data):
         return "loop"
-    if backend == "async" and not pad_compatible(client_data):
+    if backend in ("async", "hier") and not pad_compatible(client_data):
         raise ValueError(
-            "backend='async' runs on the stacked path and needs identical "
-            "or pad-compatible per-client data trees; genuinely "
-            "incompatible trees have no stale-gossip execution "
-            "(backend='loop' would silently change the exchange semantics)")
+            f"backend='{backend}' runs on the stacked path and needs "
+            "identical or pad-compatible per-client data trees; genuinely "
+            "incompatible trees have no "
+            f"{'two-level' if backend == 'hier' else 'stale-gossip'} "
+            "execution (backend='loop' would silently change the exchange "
+            "semantics)")
     return backend
 
 
@@ -184,6 +190,7 @@ def run_federated(
     use_pallas: Optional[bool] = None,
     compress: Optional[str] = None,
     compress_ratio: Optional[float] = None,
+    n_shards: Optional[int] = None,
 ) -> Dict:
     """Run ``cfg.rounds`` rounds of ``method``; return history + final state.
 
@@ -217,6 +224,11 @@ def run_federated(
     section of ``repro.core.engine``. Applies to whatever the method
     gossips (proxies for ProxyFL/FML, the full model for FedAvg/AvgPush/
     CWT); no-exchange methods (Regular/Joint) ignore it.
+
+    ``n_shards`` overrides ``cfg.n_shards`` (None keeps the config): the
+    two-level cohort layout of ``backend="hier"`` — the shard count of
+    the [n_shards × clients-per-shard] factored exchange; the other
+    backends ignore it.
     """
     assert method in METHODS, method
     if use_pallas is not None:
@@ -225,6 +237,8 @@ def run_federated(
         cfg = dataclasses.replace(cfg, compress=compress)
     if compress_ratio is not None:
         cfg = dataclasses.replace(cfg, compress_ratio=float(compress_ratio))
+    if n_shards is not None:
+        cfg = dataclasses.replace(cfg, n_shards=int(n_shards))
     K = len(client_data)
     key = jax.random.PRNGKey(seed)
     xt, yt = test_data

@@ -73,12 +73,57 @@ round once, behind three selectable backends:
     ``ring`` mix (CWT) keeps no self mass, so τ>0 would leave clients
     model-less for τ rounds — rejected at construction.
 
+``hier`` (two-level hierarchical gossip)
+    The thousand-client composition of the three stacked backends: a
+    two-level cohort of ``cfg.n_shards × clients_per_shard`` (K must
+    divide evenly) where intra-shard exchange is the on-device matmul mix
+    over the stacked shard-local params (the vmap machinery —
+    ``fused_pushsum_mix``-eligible under ``use_pallas``, vmapped over the
+    shard axis) and inter-shard exchange is a sparse scaled permutation
+    (at most ONE cross-shard edge per client per round — exactly the
+    structure a ``ppermute`` collective realizes on a real device mesh;
+    see ``launch/steps.py``/``launch/dryrun.py --program hier_block`` for
+    the mesh deployment). Crucially this is NOT a different protocol:
+    hier executes the SAME flat column-stochastic schedule P^(t) as vmap,
+    FACTORED by edge locality (:func:`repro.core.gossip.hier_mix_split`:
+    P = blockdiag[S, L, L] + cross scaled partial permutation — an exact
+    sum decomposition), so ``n_shards`` is a pure execution-layout
+    parameter at τ=0: the factored application is bit-identical to the
+    dense [K, K] matmul (each output row performs the same ≤2 real
+    additions), at O(K·L·D) + O(K·D) FLOPs instead of O(K²·D). With
+    ``staleness`` τ>0 the cross-shard edges — and ONLY those — deliver
+    through the async τ-deep in-flight buffer (``{"hier_buffer":
+    [τ, K, D], "hier_w": [τ, K]}`` in the engine state, riding the
+    block-scan carry and every checkpoint) while the intra-shard exchange
+    stays synchronous: the deployment model is pods gossiping locally
+    every round while inter-pod traffic hides behind τ rounds of compute.
+    Mass conservation (clients + buffer) holds for any (n_shards, τ,
+    dropout) — :func:`repro.core.gossip.hier_gossip_reference` is the
+    executable spec. Checkpoints stay backend-portable: client states
+    keep the FLAT [K, ...] vmap layout (the shard reshape happens only
+    inside the traced programs), so a hier snapshot restores into
+    loop/vmap engines unchanged; only the τ>0 buffer keys are
+    hier-specific (a τ-mismatched restore fails the shape match, and the
+    config fingerprint covers ``n_shards``). ``n_shards=1`` (any τ:
+    every edge is intra-shard, so staleness is vacuous) and τ=0 S>1 run
+    bit-identically to ``backend="vmap"`` — params AND epsilon — the
+    former literally via the vmap round programs, the latter via the
+    factored-application bit-equality (both enforced by
+    tests/test_conformance.py). Dense mixing (``mix="mean"`` /
+    ``topology="full"``) has O(K) cross edges per client — no O(1)
+    collective schedule exists — and is rejected at construction for
+    S>1, as is the pure-permutation ring mix with τ>0 (same model-less
+    argument as async) and compressed exchange (the codec is wired to
+    the dense matmul paths; factored compressed gossip is future work).
+
 Backend selection guide
 -----------------------
 * heterogeneous private models            -> ``loop`` (forced)
 * homogeneous cohort, one host            -> ``vmap``
 * one client per device/pod on a mesh     -> ``shard_map``
 * straggler-tolerant stale gossip         -> ``async`` (+ ``staleness``)
+* two-level cohort (pods × local clients) -> ``hier`` (+ ``cfg.n_shards``,
+  optional ``staleness`` on the cross-shard edges)
 * ``"auto"``                              -> ``vmap`` when client states
   share one tree structure and the per-client data trees are
   *pad-compatible* (same structure, dtypes and trailing dims; leading
@@ -241,12 +286,14 @@ from ..data.ragged import pad_compatible, pad_stack
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
 from ..optim import Adam
 from .compress import compress_round_key, compress_spec
-from .gossip import (gossip_shift, mix_matrix, mix_schedule,
+from .gossip import (gossip_shift, hier_layout, hier_mix_debiased,
+                     hier_mix_schedule, hier_mix_split,
+                     hier_stale_mix_apply, mix_matrix, mix_schedule,
                      pushsum_gossip_shard, pushsum_mix_debiased,
                      shard_map_fn, shift_schedule, stale_mix_apply,
                      stale_mix_schedule, stale_mix_split)
 
-BACKENDS = ("loop", "vmap", "shard_map", "async")
+BACKENDS = ("loop", "vmap", "shard_map", "async", "hier")
 MIXES = ("pushsum", "mean", "ring", "none")
 
 # round t's RNG key is fold_in(base_key, ROUND_KEY_OFFSET + t) — the
@@ -386,11 +433,13 @@ class FederationEngine:
         ``init(key) -> state`` per client.
     sample_fn : SampleFn
         ``sample(client_data, key) -> batch`` — draws one local batch.
-    backend : "auto" | "loop" | "vmap" | "shard_map" | "async"
+    backend : "auto" | "loop" | "vmap" | "shard_map" | "async" | "hier"
     mix : "pushsum" | "mean" | "ring" | "none"
     mesh, axis : mesh + axis name for the shard_map backend.
-    staleness : gossip delay τ for the async backend (None -> the value in
-        ``cfg.staleness``); ignored by the synchronous backends.
+    staleness : gossip delay τ for the async backend, and the CROSS-SHARD
+        delay for the hier backend (None -> the value in
+        ``cfg.staleness``); ignored by the synchronous backends. The hier
+        shard count comes from ``cfg.n_shards`` (must divide n_clients).
     """
 
     def __init__(self, cfg: ProxyFLConfig, *, n_clients: int,
@@ -414,7 +463,7 @@ class FederationEngine:
         if backend == "auto":
             backend = "vmap" if homogeneous else "loop"
         assert backend in BACKENDS, backend
-        if backend in ("vmap", "shard_map", "async"):
+        if backend in ("vmap", "shard_map", "async", "hier"):
             assert homogeneous, (
                 f"{backend} backend requires a homogeneous cohort; "
                 "heterogeneous private architectures need backend='loop'")
@@ -422,13 +471,13 @@ class FederationEngine:
             assert mesh is not None, "shard_map backend needs a mesh"
             assert dict(mesh.shape).get(axis) == n_clients, (
                 f"mesh axis {axis!r} must hold exactly {n_clients} devices")
-        if backend == "async":
+        if backend in ("async", "hier"):
             self.staleness = int(cfg.staleness if staleness is None
                                  else staleness)
             assert self.staleness >= 0, self.staleness
             if self.staleness and mix == "ring":
                 raise ValueError(
-                    "async staleness>0 is incompatible with the pure-"
+                    f"{backend} staleness>0 is incompatible with the pure-"
                     "permutation ring mix (CWT): clients keep no self mass, "
                     "so a delayed delivery would leave them model-less for "
                     "the first τ rounds; use staleness=0 or a mix with a "
@@ -439,6 +488,24 @@ class FederationEngine:
         # the vmap round programs verbatim on UNWRAPPED state (no buffer),
         # which is what makes τ=0 bit-identical to backend="vmap"
         self._stale = backend == "async" and self.staleness > 0
+        # hier: two-level [n_shards × clients-per-shard] cohort executing
+        # the SAME flat P^(t) factored by edge locality; n_shards=1 makes
+        # every edge intra-shard (staleness vacuous), so the engine runs
+        # the vmap round programs verbatim — the bit-identity anchor
+        self.n_shards = (hier_layout(n_clients, cfg.n_shards)[0]
+                         if backend == "hier" else 1)
+        self._hier = backend == "hier" and self.n_shards > 1
+        if self._hier and mix != "none" and n_clients > 1:
+            topo = {"pushsum": cfg.topology, "mean": "full",
+                    "ring": "ring"}[mix]
+            if topo == "full":
+                raise ValueError(
+                    "hier with n_shards>1 needs a sparse exchange: dense "
+                    "mixing (mix='mean' / topology='full') has O(K) "
+                    "cross-shard edges per client, which no O(1) inter-"
+                    "shard collective schedule can realize; use pushsum/"
+                    "ring mixes or n_shards=1")
+        self._hier_stale = self._hier and self.staleness > 0
         # compressed proxy exchange (cfg.compress): None keeps every round
         # program byte-for-byte the uncompressed one; a spec adds each
         # client's codec state (the public copy receivers mix) to the
@@ -451,12 +518,19 @@ class FederationEngine:
                 "implemented for the shard_map ppermute exchange — the "
                 "collective ships full-precision tensors; use the loop/"
                 "vmap/async backends for compressed rounds")
+        if self.compress is not None and self._hier:
+            raise ValueError(
+                "compressed gossip (cfg.compress != 'none') is not "
+                "implemented for the hier factored exchange — the codec "
+                "is wired to the dense matmul paths; use n_shards=1 (which "
+                "runs the vmap programs verbatim) or the loop/vmap/async "
+                "backends for compressed rounds")
         self._compressed = (self.compress is not None
                             and mix != "none" and n_clients > 1)
         # a federation-level state wrapper {"clients": ..., [stale buffer,]
         # [codec public copies]} carries cross-round exchange state NEXT TO
         # the clients — per-client step_fns must never see (and drop) it
-        self._wrapped = self._stale or self._compressed
+        self._wrapped = self._stale or self._compressed or self._hier_stale
         self.backend = backend
         # Pallas-fused exchange (cfg.use_pallas): the matmul-mix backends
         # route through the fused blocked kernels in repro.kernels —
@@ -482,10 +556,11 @@ class FederationEngine:
         backend). For the stale async backend (τ>0) and for compressed
         exchanges the engine state is a federation-level wrapper
         ``{"clients": <stacked tree | list>, ["stale_theta": [τ, K, D],
-        "stale_w": [τ, K],] ["ef_state": [K, D]]}`` — the in-flight gossip
-        buffer and the codec's public copies ride next to the clients,
-        never inside them (per-client step_fns must not see or drop
-        them)."""
+        "stale_w": [τ, K],] ["hier_buffer": [τ, K, D], "hier_w": [τ, K],]
+        ["ef_state": [K, D]]}`` — the in-flight gossip buffers (flat async
+        or hier cross-shard) and the codec's public copies ride next to
+        the clients, never inside them (per-client step_fns must not see
+        or drop them)."""
         return state["clients"] if self._wrapped else state
 
     def init_states(self, key) -> Any:
@@ -511,6 +586,16 @@ class FederationEngine:
             state["stale_theta"] = jnp.zeros(
                 (self.staleness, self.K, flat0.shape[0]), flat0.dtype)
             state["stale_w"] = jnp.zeros(
+                (self.staleness, self.K),
+                jnp.result_type(states[0]["w"]))
+        if self._hier_stale:
+            # cross-shard in-flight buffer (raw numerators θ = z·w + the
+            # matching weights), cold-started empty: for τ rounds the
+            # cross edges deliver nothing and the de-bias weights account
+            # for the mass in flight — intra-shard mass is never buffered
+            state["hier_buffer"] = jnp.zeros(
+                (self.staleness, self.K, flat0.shape[0]), flat0.dtype)
+            state["hier_w"] = jnp.zeros(
                 (self.staleness, self.K),
                 jnp.result_type(states[0]["w"]))
         if self._compressed:
@@ -585,6 +670,14 @@ class FederationEngine:
             # checkpoint fails the key/shape match with a descriptive error)
             payload["stale_theta"] = state["stale_theta"]
             payload["stale_w"] = state["stale_w"]
+        if self._hier_stale:
+            # same argument for the hier cross-shard buffer: rounds
+            # t+1..t+τ merge the cross-shard deliveries recorded here, so
+            # a resume without it could not replay the trajectory (τ=0 /
+            # n_shards=1 snapshots carry no buffer and stay plain vmap
+            # payloads — backend-portable by construction)
+            payload["hier_buffer"] = state["hier_buffer"]
+            payload["hier_w"] = state["hier_w"]
         if self._compressed:
             # the codec's public copies are federation state for the same
             # reason: round t+1's transmission is C(m − ef_state) and the
@@ -621,6 +714,9 @@ class FederationEngine:
             if self._stale:
                 state["stale_theta"] = loaded["stale_theta"]
                 state["stale_w"] = loaded["stale_w"]
+            if self._hier_stale:
+                state["hier_buffer"] = loaded["hier_buffer"]
+                state["hier_w"] = loaded["hier_w"]
             if self._compressed:
                 state["ef_state"] = loaded["compress_ef_state"]
         else:
@@ -667,6 +763,8 @@ class FederationEngine:
             state, metrics = self._round_loop(state, data, t, key, act)
         elif self._stale:
             state, metrics = self._round_stale(state, data, t, key, act)
+        elif self._hier:
+            state, metrics = self._round_hier(state, data, t, key, act)
         else:
             state, metrics = self._round_stacked(state, data, t, key, act)
         for k, acc in enumerate(self.accountants):
@@ -710,7 +808,12 @@ class FederationEngine:
         — the same outer scan with the τ-deep in-flight buffer in the
         carry (rounds interleave INSIDE the block; dropout stays on the
         blocked path since the stale splits are runtime arguments); at
-        staleness=0 it runs the vmap block verbatim.
+        staleness=0 it runs the vmap block verbatim. The hier backend at
+        n_shards>1 runs :meth:`_rounds_block_hier` — the factored
+        two-level exchange in the same outer scan (the stacked factored
+        schedules are runtime arguments, so dropout stays blocked too),
+        with the cross-shard buffer joining the carry when staleness>0;
+        at n_shards=1 it runs the vmap block verbatim.
 
         Returns ``(state, metrics)`` with each metric stacked to
         ``[n_rounds, K]`` (row i = round t0+i, NaN for inactive clients).
@@ -723,8 +826,9 @@ class FederationEngine:
                 state, m = self.run_round(state, data, t, round_key(key, t))
                 rows.append(m)
             return state, _stack_metric_rows(rows, self.K)
-        block = self._rounds_block_stale if self._stale else \
-            self._rounds_block
+        block = (self._rounds_block_stale if self._stale else
+                 self._rounds_block_hier if self._hier else
+                 self._rounds_block)
         return block(state, data, t0, n_rounds, key,
                      active_schedule(t0, n_rounds, self.K, self.cfg))
 
@@ -1237,6 +1341,194 @@ class FederationEngine:
                    "stale_w": buf_w}
             if self._compressed:  # mix-less block: codec state untouched
                 out["ef_state"] = state["ef_state"]
+        return out, self._finish_block(ms, act_stack, data)
+
+    # -- hier backend (two-level factored exchange) --------------------------
+
+    def _hier_round_core(self, n_steps: int, mixing: bool,
+                         step_masked: bool = False,
+                         pass_n_valid: bool = True):
+        """One traceable program for a HIER round: the shared
+        :meth:`_local_phase` VERBATIM (local trajectories — RNG chains,
+        batch draws, DP noise — bit-identical to vmap by construction),
+        then the factored two-level exchange. The factored schedule
+        ``(blocks[S, L, L], src[K], scale[K])`` arrives as runtime
+        arguments (one compilation serves every round and membership
+        pattern). At τ=0 the exchange is
+        :func:`repro.core.gossip.hier_mix_debiased` — synchronous, and
+        bit-identical to the dense vmap exchange on the same P; at τ>0 it
+        is :func:`repro.core.gossip.hier_stale_mix_apply` with the
+        cross-shard buffer rows in the signature, rotated here exactly
+        like the async buffer. Client states keep the flat [K, ...]
+        layout throughout — the shard reshape is internal to the
+        exchange — which is what keeps checkpoints backend-portable and
+        the data stacking layout-independent."""
+        local = self._local_phase(n_steps, step_masked, pass_n_valid)
+        up, tau = self.use_pallas, self.staleness
+
+        def exchange(trained, blocks, src, scale, buf_t, buf_w):
+            theta_tree = trained["proxy"]["params"]
+            like = jax.tree_util.tree_map(lambda x: x[0], theta_tree)
+            flat = jax.vmap(tree_flatten_vector)(theta_tree)       # [K, D]
+            w = jnp.asarray(trained["w"], flat.dtype)
+            if tau:
+                unb, send_t, w2, send_w = hier_stale_mix_apply(
+                    flat, w, blocks, src, scale, buf_t[0], buf_w[0],
+                    use_pallas=up)
+                buf_t = jnp.concatenate([buf_t[1:], send_t[None]])
+                buf_w = jnp.concatenate([buf_w[1:], send_w[None]])
+            else:
+                unb, w2 = hier_mix_debiased(flat, w, blocks, src, scale,
+                                            use_pallas=up)
+            theta2 = jax.vmap(
+                lambda v: tree_unflatten_vector(v, like))(unb)
+            trained = dict(trained)
+            trained["proxy"] = dict(trained["proxy"], params=theta2)
+            trained["w"] = w2.astype(jnp.result_type(trained["w"]))
+            return trained, buf_t, buf_w
+
+        if tau:
+            def round_fn(stacked, buf_t, buf_w, data, n_valid, steps,
+                         blocks, src, scale, act, key):
+                trained, last = local(stacked, data, n_valid, steps, act,
+                                      key)
+                if mixing:
+                    trained, buf_t, buf_w = exchange(
+                        trained, blocks, src, scale, buf_t, buf_w)
+                return trained, buf_t, buf_w, last
+        else:
+            def round_fn(stacked, data, n_valid, steps, blocks, src, scale,
+                         act, key):
+                trained, last = local(stacked, data, n_valid, steps, act,
+                                      key)
+                if mixing:
+                    trained, _, _ = exchange(trained, blocks, src, scale,
+                                             None, None)
+                return trained, last
+
+        return round_fn
+
+    def _hier_split(self, t: int, act):
+        """Runtime (blocks, src, scale) device arguments of one hier
+        round's factored exchange."""
+        blocks, src, scale = hier_mix_split(
+            mix_matrix(self.mix, t, self.K, self.cfg.topology, act),
+            self.n_shards)
+        return (jnp.asarray(blocks, jnp.float32),
+                jnp.asarray(src, jnp.int32),
+                jnp.asarray(scale, jnp.float32))
+
+    def _hier_placeholders(self, T: int = 0):
+        """Never-read factored-schedule placeholders for mix-less rounds."""
+        S = self.n_shards
+        L = self.K // S
+        lead = () if T == 0 else (T,)
+        return (jnp.zeros(lead + (S, L, L), jnp.float32),
+                jnp.zeros(lead + (self.K,), jnp.int32),
+                jnp.zeros(lead + (self.K,), jnp.float32))
+
+    def _round_hier(self, state, data, t, key, act):
+        data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
+            self._stacked_inputs(data)
+        act_arr = jnp.asarray(np.ones(self.K, bool) if act is None else act)
+        mixing = self.mix != "none" and self.K > 1
+        tau = self.staleness
+        rkey = ("hier", n_steps, step_masked, pass_nv, mixing)
+        if rkey not in self._rounds:
+            donate = (tuple(range(3)) if tau else (0,)) if self._donate \
+                else ()
+            self._rounds[rkey] = jax.jit(
+                self._hier_round_core(n_steps, mixing, step_masked,
+                                      pass_nv),
+                donate_argnums=donate)
+        blocks, src, scale = (self._hier_split(t, act) if mixing
+                              else self._hier_placeholders())
+        if tau:
+            clients, buf_t, buf_w, last = self._rounds[rkey](
+                state["clients"], state["hier_buffer"], state["hier_w"],
+                data_s, n_valid, steps_dev, blocks, src, scale, act_arr,
+                key)
+            out: Any = {"clients": clients, "hier_buffer": buf_t,
+                        "hier_w": buf_w}
+        else:
+            out, last = self._rounds[rkey](
+                self._clients_of(state), data_s, n_valid, steps_dev,
+                blocks, src, scale, act_arr, key)
+        metrics = {k: np.asarray(v) for k, v in last.items()}
+        return out, metrics
+
+    def _rounds_block_hier(self, state, data, t0, T, key, act_sched):
+        """Hier round-block: ONE compiled outer ``lax.scan`` over rounds,
+        consuming the block's stacked factored schedules
+        (``hier_mix_schedule``: blocks[T, S, L, L] + src/scale[T, K]) as
+        runtime arguments; at τ>0 the cross-shard in-flight buffer joins
+        the scan carry exactly like the async buffer, so rounds
+        interleave inside the block and the host sees only the edge.
+        Keys fold in-scan — any block size replays the per-round
+        trajectory bit-exactly."""
+        data_s, n_valid, pass_nv, n_steps, step_masked, steps_dev = \
+            self._stacked_inputs(data)
+        act_stack = (np.ones((T, self.K), bool) if act_sched is None
+                     else act_sched)
+        mixing = self.mix != "none" and self.K > 1
+        tau = self.staleness
+        rkey = ("hier_block", T, n_steps, step_masked, pass_nv, mixing)
+        if rkey not in self._rounds:
+            core = self._hier_round_core(n_steps, mixing, step_masked,
+                                         pass_nv)
+
+            if tau:
+                def block_fn(stacked, buf_t, buf_w, data, n_valid, steps,
+                             blockss, srcs, scales, acts, ts, base_key):
+                    def body(carry, xs):
+                        st, bt, bw = carry
+                        bl, sr, sc, a, t = xs
+                        st, bt, bw, last = core(
+                            st, bt, bw, data, n_valid, steps, bl, sr, sc,
+                            a, round_key(base_key, t))
+                        return (st, bt, bw), last
+
+                    (st, bt, bw), ms = jax.lax.scan(
+                        body, (stacked, buf_t, buf_w),
+                        (blockss, srcs, scales, acts, ts))
+                    return st, bt, bw, ms
+
+                donate = tuple(range(3)) if self._donate else ()
+            else:
+                def block_fn(stacked, data, n_valid, steps, blockss, srcs,
+                             scales, acts, ts, base_key):
+                    def body(st, xs):
+                        bl, sr, sc, a, t = xs
+                        st2, last = core(st, data, n_valid, steps, bl, sr,
+                                         sc, a, round_key(base_key, t))
+                        return st2, last
+
+                    return jax.lax.scan(
+                        body, stacked, (blockss, srcs, scales, acts, ts))
+
+                donate = self._donate
+            self._rounds[rkey] = jax.jit(block_fn, donate_argnums=donate)
+        if mixing:
+            blockss, srcs, scales = hier_mix_schedule(
+                self.mix, t0, T, self.K, self.n_shards, self.cfg.topology,
+                active=act_sched)
+            blockss = jnp.asarray(blockss, jnp.float32)
+            srcs = jnp.asarray(srcs, jnp.int32)
+            scales = jnp.asarray(scales, jnp.float32)
+        else:
+            blockss, srcs, scales = self._hier_placeholders(T)
+        ts = jnp.arange(t0, t0 + T, dtype=jnp.int32)
+        if tau:
+            clients, buf_t, buf_w, ms = self._rounds[rkey](
+                state["clients"], state["hier_buffer"], state["hier_w"],
+                data_s, n_valid, steps_dev, blockss, srcs, scales,
+                jnp.asarray(act_stack), ts, key)
+            out: Any = {"clients": clients, "hier_buffer": buf_t,
+                        "hier_w": buf_w}
+        else:
+            out, ms = self._rounds[rkey](
+                self._clients_of(state), data_s, n_valid, steps_dev,
+                blockss, srcs, scales, jnp.asarray(act_stack), ts, key)
         return out, self._finish_block(ms, act_stack, data)
 
     def _build_round(self, n_steps: int, mix_op, step_masked: bool = False,

@@ -402,6 +402,207 @@ def stale_gossip_reference(z0, w0, Ps, staleness: int):
 
 
 # ---------------------------------------------------------------------------
+# hierarchical gossip: the hier backend's two-level factoring of P^(t)
+#
+# A two-level cohort of S shards × L clients-per-shard executes the SAME
+# flat column-stochastic schedule P^(t), factored by edge locality instead
+# of applied as one dense [K, K] matmul: the entries whose sender and
+# receiver share a shard form a block-diagonal [S, L, L] part (applied as S
+# independent [L, L] × [L, D] matmuls — the on-device mix, O(K·L·D) instead
+# of O(K²·D)), and the cross-shard entries form a sparse scaled permutation
+# (each client sends to at most ONE peer per round under the exponential/
+# ring protocols — exactly the structure a `ppermute` collective realizes
+# on a device mesh, and exactly the per-client O(1) bytes-on-wire claim).
+# The split is a SUM decomposition, P = blockdiag + cross, so rebuilding is
+# exact (disjoint supports): the factored application moves the same mass
+# as the flat matmul, and mass conservation / column-stochasticity are
+# inherited from P. Staleness applies to the cross part only: delayed
+# cross-shard deliveries ride the same τ-deep in-flight buffer algebra as
+# :func:`stale_gossip_reference` while the intra-shard exchange stays
+# synchronous (the "inter-pod latency absorbed by the async τ-buffer"
+# deployment of ROADMAP's thousand-client item).
+
+
+def hier_layout(n_clients: int, n_shards: int) -> Tuple[int, int]:
+    """Validated two-level cohort layout ``(S, L)``: client k lives in
+    shard ``k // L`` at local index ``k % L``. ``n_shards`` must divide the
+    cohort evenly — ragged shard sizes would need per-shard block shapes
+    and break the single batched intra-shard matmul."""
+    S = 1 if n_shards is None else int(n_shards)
+    if S < 1 or S > n_clients or n_clients % S:
+        raise ValueError(
+            f"n_shards={n_shards} must evenly divide n_clients="
+            f"{n_clients} (two-level [shards × clients-per-shard] cohort)")
+    return S, n_clients // S
+
+
+def hier_mix_split(P, n_shards: int):
+    """Factor one flat column-stochastic ``P`` [K, K] by edge locality.
+
+    Returns ``(blocks[S, L, L], src[K], scale[K])``:
+
+    * ``blocks[s]`` — P restricted to shard s's intra-shard edges
+      (diagonal included);
+    * ``src[i]`` / ``scale[i]`` — the one cross-shard in-edge of client i
+      (``P[i, src[i]] == scale[i]``), or ``src[i] == i, scale[i] == 0``
+      when none. Cross-shard deliveries are therefore a gather + scale —
+      the simulation form of a ``ppermute`` + scale on a real mesh.
+
+    The decomposition is EXACT (disjoint supports):
+    ``blockdiag(blocks) + scatter(src, scale) == P`` bitwise — proven by
+    tests/test_gossip.py against :func:`mix_schedule`. Raises when the
+    cross-shard part is not a scaled partial permutation (≥2 cross
+    in/out-edges per client — e.g. dense "full"/mean mixing), which is not
+    hier-factorable: there is no O(1) collective schedule for it."""
+    P = np.asarray(P)
+    K = P.shape[-1]
+    S, L = hier_layout(K, n_shards)
+    shard = np.arange(K) // L
+    intra = shard[:, None] == shard[None, :]
+    cross = np.where(intra, 0.0, P)
+    if (np.count_nonzero(cross, axis=1) > 1).any() or \
+            (np.count_nonzero(cross, axis=0) > 1).any():
+        raise ValueError(
+            "hier factoring needs at most one cross-shard edge per client "
+            "per round (a scaled partial permutation); dense mixing "
+            "(topology='full' / mix='mean') is not hier-factorable")
+    blocks = np.where(intra, P, 0.0).reshape(S, L, S, L)
+    blocks = blocks[np.arange(S), :, np.arange(S), :]          # [S, L, L]
+    src = np.argmax(cross != 0.0, axis=1)
+    has = cross[np.arange(K), src] != 0.0
+    src = np.where(has, src, np.arange(K))
+    scale = np.where(has, cross[np.arange(K), src], 0.0)
+    return blocks, src.astype(np.int64), scale
+
+
+def hier_mix_schedule(mix: str, t0: int, T: int, n_clients: int,
+                      n_shards: int, topology: str = "exponential",
+                      active=None, self_weight: float = 0.5):
+    """Stacked two-level factoring of one round-block's flat schedule:
+    ``(blocks[T, S, L, L], src[T, K], scale[T, K])`` with each round's
+    rebuilt ``blockdiag(blocks[i]) + scatter(src[i], scale[i])`` equal —
+    bitwise — to ``mix_schedule(mix, t0, T, ...)[i]``. Same mix -> graph
+    mapping and §3.4 ``active`` handling (None or bool[T, K]) as
+    :func:`mix_schedule`; the host-side half of the hier backend's fused
+    round-block execution."""
+    Ps = mix_schedule(mix, t0, T, n_clients, topology, active=active,
+                      self_weight=self_weight)
+    parts = [hier_mix_split(Ps[i], n_shards) for i in range(T)]
+    blocks = np.stack([p[0] for p in parts])
+    src = np.stack([p[1] for p in parts])
+    scale = np.stack([p[2] for p in parts])
+    return blocks, src, scale
+
+
+def _hier_intra(x, w, blocks, use_pallas, interpret):
+    """Block-diagonal half of one factored exchange: S independent
+    [L, L] × [L, D] shard-local matmuls over the stacked vectors (plus the
+    matching w mix) — ``use_pallas`` routes each shard's matmul through the
+    fused blocked kernel (the [L, L] block resident in VMEM, vmapped over
+    the shard axis)."""
+    S, L, _ = blocks.shape
+    xs = x.reshape(S, L, -1)
+    ws = w.reshape(S, L)
+    if use_pallas:
+        from ..kernels.pushsum_mix import fused_pushsum_mix
+        mixed, wm = jax.vmap(lambda f, ww, p: fused_pushsum_mix(
+            f, ww, p, debias=False, interpret=interpret))(xs, ws, blocks)
+    else:
+        Pb = jnp.asarray(blocks, x.dtype)
+        mixed = jnp.einsum("sij,sjd->sid", Pb, xs)
+        wm = jnp.einsum("sij,sj->si", Pb.astype(w.dtype), ws)
+    return mixed.reshape(x.shape), wm.reshape(w.shape)
+
+
+def hier_mix_debiased(flat, w, blocks, src, scale, *, use_pallas=False,
+                      interpret=None):
+    """One SYNCHRONOUS factored exchange on the stacked proxies — the
+    two-level application of :func:`pushsum_mix_debiased`'s
+    ``z' = (P·z) / (P·w)``: shard-local block matmuls plus the scaled
+    cross-shard gather (the simulation form of a ``ppermute`` delivery).
+    Because every client has at most one cross-shard in-edge and the
+    rebuilt P is exact, the result is BITWISE equal to the flat dense
+    exchange on the same P (each output row performs the same ≤2 real
+    additions; zero terms add exactly) — enforced by
+    tests/test_conformance.py's hier-τ0 == vmap columns."""
+    mixed, wm = _hier_intra(flat, w, blocks, use_pallas, interpret)
+    s = jnp.asarray(scale, flat.dtype)
+    mixed = mixed + s[:, None] * flat[src]
+    w2 = wm + s.astype(w.dtype) * w[src]
+    return mixed / w2[:, None], w2
+
+
+def hier_stale_mix_apply(flat, w, blocks, src, scale, buf_t0, buf_w0, *,
+                         use_pallas=False, interpret=None):
+    """One STALE (τ>0) factored exchange: the on-device application of
+    :func:`hier_gossip_reference`'s round body. Re-bias θ = z·w, mix the
+    intra-shard part synchronously, emit the cross-shard send
+    ``scale·θ[src]`` (the caller pushes it into the τ-deep buffer and owns
+    the rotation, exactly as with :func:`stale_mix_apply`), merge the
+    round-(t−τ) delivery ``buf_t0``/``buf_w0``, and de-bias by the
+    identically-delayed weights. Returns ``(z', send_t, w', send_w)``.
+    Only cross-shard mass is ever stale — the intra-shard matmul reads the
+    CURRENT θ."""
+    theta = flat * w[:, None]                  # raw PushSum numerator
+    mixed, wm = _hier_intra(theta, w, blocks, use_pallas, interpret)
+    s = jnp.asarray(scale, flat.dtype)
+    send_t = s[:, None] * theta[src]
+    send_w = s.astype(w.dtype) * w[src]
+    w2 = wm + buf_w0
+    return (mixed + buf_t0) / w2[:, None], send_t, w2, send_w
+
+
+def hier_gossip_reference(z0, w0, Ps, n_shards: int, staleness: int = 0):
+    """Numpy reference of the two-level (hier) PushSum exchange — the
+    executable spec the hier engine backend and its property tests are
+    held to, mirroring :func:`stale_gossip_reference`. Per round t, with
+    ``blocks/src/scale = hier_mix_split(P(t), n_shards)``:
+
+    1. re-bias:   θ(t) = z(t) · w(t);
+    2. intra mix: ``mixed = blockdiag(blocks) @ θ`` — S independent
+       [L, L] × [L, D] shard-local matmuls, always synchronous;
+    3. cross send: client i's one cross-shard in-edge delivers
+       ``scale[i] · θ[src[i]]`` — immediately at τ=0, or through a τ-deep
+       in-flight buffer at τ>0 (ONLY the cross-shard mass is ever stale);
+    4. merge + de-bias: z(t+1) = (mixed + delivery) / (w-mixed + w-delivery).
+
+    Invariants (tested in tests/test_gossip.py): Σ w + Σ buf_w == Σ w0 and
+    Σ z·w + Σ buf == Σ z0·w0 after every round for any τ, n_shards and
+    §3.4 dropout trajectory; at τ=0 the trajectory equals the flat
+    synchronous :func:`stale_gossip_reference` (staleness 0) bit-for-bit —
+    the factored application of P moves identical mass because every
+    client has at most one cross-shard in-edge (a single extra addition
+    against the shard-local partial row sum). Returns ``(z, w,
+    buf_theta[τ, K, D], buf_w[τ, K])``; buffer row 0 is the next
+    delivery."""
+    z = np.asarray(z0, np.float64)
+    w = np.asarray(w0, np.float64)
+    K, D = z.shape
+    S, L = hier_layout(K, n_shards)
+    tau = int(staleness)
+    buf_t = np.zeros((tau, K, D))
+    buf_w = np.zeros((tau, K))
+    for P in Ps:
+        blocks, src, scale = hier_mix_split(np.asarray(P, np.float64),
+                                            n_shards)
+        theta = z * w[:, None]
+        mixed = np.einsum("sij,sjd->sid", blocks,
+                          theta.reshape(S, L, D)).reshape(K, D)
+        wm = np.einsum("sij,sj->si", blocks, w.reshape(S, L)).reshape(K)
+        send_t = scale[:, None] * theta[src]
+        send_w = scale * w[src]
+        if tau == 0:
+            arrive_t, arrive_w = send_t, send_w
+        else:
+            arrive_t, arrive_w = buf_t[0], buf_w[0]
+            buf_t = np.concatenate([buf_t[1:], send_t[None]])
+            buf_w = np.concatenate([buf_w[1:], send_w[None]])
+        w = wm + arrive_w
+        z = (mixed + arrive_t) / w[:, None]
+    return z, w, buf_t, buf_w
+
+
+# ---------------------------------------------------------------------------
 # distributed backend: one client per mesh-axis index, ppermute exchange
 
 

@@ -23,6 +23,13 @@ Usage::
     python -m repro.launch.dryrun --all --mesh both --out results/dryrun
     python -m repro.launch.dryrun --arch jamba-1.5-large-398b --shape long_500k \
         --mesh single --tag kvq8 --kv-cache-dtype bfloat16
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k \
+        --mesh multi --program hier_block --clients-per-shard 4
+
+``--program hier_block`` lowers the engine's ``backend="hier"`` round-block
+on the two-level mesh: one shard of ``--clients-per-shard`` stacked clients
+per pod, intra-shard PushSum as a local block matmul, cross-shard edges as
+at most two ppermutes along "pod" per round.
 """
 # NOTE: no ``from __future__ import annotations`` here — the XLA_FLAGS lines
 # above must be the first statements of the module, which rules it out.
@@ -48,6 +55,7 @@ from .steps import (
     input_specs,
     make_decode_step,
     make_fl_round_step,
+    make_hier_round_block_step,
     make_prefill_step,
     make_round_block_step,
     make_train_step,
@@ -57,9 +65,15 @@ from .steps import (
     train_state_shapes,
 )
 
-#: rounds fused into one program by ``--program round_block`` (the engine's
-#: round-block unit; static — each round's ppermute schedule is baked in)
+#: rounds fused into one program by ``--program round_block`` /
+#: ``hier_block`` (the engine's round-block unit; static — each round's
+#: ppermute schedule is baked in)
 BLOCK_ROUNDS = 4
+
+#: clients stacked per pod by ``--program hier_block`` (the two-level mesh:
+#: n_shards = pod count, clients_per_shard vmapped within each pod;
+#: override with --clients-per-shard)
+CLIENTS_PER_SHARD = 4
 
 # Architectures with sub-quadratic context handling run long_500k; pure
 # full-attention architectures skip it (DESIGN.md "long_500k skip decisions").
@@ -177,6 +191,7 @@ DRYRUN_OPTS = StepOptions(shard_acts=True, dp_chunk=16)
 
 def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             program: str = "auto", opts: StepOptions = DRYRUN_OPTS,
+            clients_per_shard: int = CLIENTS_PER_SHARD,
             tag: str = "", verbose: bool = True) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
@@ -195,10 +210,19 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
     key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
     t0 = time.time()
 
-    if program in ("train", "fl_round", "round_block"):
+    if program in ("train", "fl_round", "round_block", "hier_block"):
         proxy = proxy_of(cfg)
-        n_clients = (mesh.shape.get("pod", 0)
-                     if program in ("fl_round", "round_block") else 0)
+        pods = mesh.shape.get("pod", 0)
+        if program == "hier_block":
+            if not pods:
+                raise ValueError(
+                    "--program hier_block needs the two-level (multi-pod) "
+                    "mesh — run with --mesh multi")
+            # two-level cohort: one SHARD per pod, clients_per_shard
+            # clients vmapped within it
+            n_clients = pods * clients_per_shard
+        else:
+            n_clients = pods if program in ("fl_round", "round_block") else 0
         state_sds = train_state_shapes(cfg, proxy, fl, opts)
         if n_clients:
             state_sds = jax.tree_util.tree_map(
@@ -219,6 +243,14 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             # metrics stacked [n_rounds, K]: round dim replicated, K on pod
             metrics_spec = {"private_loss": P(None, "pod"),
                             "proxy_loss": P(None, "pod")}
+        elif program == "hier_block":
+            step = make_hier_round_block_step(
+                cfg, proxy, fl, mesh, pods, clients_per_shard, opts,
+                n_rounds=BLOCK_ROUNDS)
+            # stacked [n_rounds, K]: K = pods·clients_per_shard, contiguous
+            # shard blocks of clients_per_shard live on each pod
+            metrics_spec = {"private_loss": P(None, "pod"),
+                            "proxy_loss": P(None, "pod")}
         else:
             step = make_train_step(cfg, proxy, fl, opts)
             metrics_spec = {"private_loss": P(), "proxy_loss": P()}
@@ -233,9 +265,12 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         arg_bytes_dev = (sharded_bytes_per_device(state_sds, state_spec, mesh)
                          + sharded_bytes_per_device(batch_sds, batch_spec, mesh))
         mf = model_flops(cfg, shape, proxy)
-        if program == "round_block":
+        if program in ("round_block", "hier_block"):
             mf *= BLOCK_ROUNDS  # the program does n_rounds rounds of work
-    if program not in ("train", "fl_round", "round_block"):
+        if program == "hier_block":
+            # n_clients DML steps per round, not one per pod
+            mf *= n_clients / max(1, pods)
+    if program not in ("train", "fl_round", "round_block", "hier_block"):
         modes = None
         state_sds = serve_state_shapes(cfg, shape)
         batch_sds = input_specs(cfg, shape)
@@ -320,7 +355,11 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
     ap.add_argument("--program", default="auto",
                     choices=("auto", "train", "fl_round", "round_block",
-                             "prefill", "decode"))
+                             "hier_block", "prefill", "decode"))
+    ap.add_argument("--clients-per-shard", type=int,
+                    default=CLIENTS_PER_SHARD,
+                    help="clients stacked per pod for --program hier_block "
+                         "(the two-level mesh: n_shards = pod count)")
     ap.add_argument("--all", action="store_true",
                     help="every (arch × shape) for the chosen mesh(es)")
     ap.add_argument("--out", default="results/dryrun", help="JSON output dir")
@@ -367,7 +406,9 @@ def main(argv=None) -> int:
     failures = 0
     for a, s, m in combos:
         try:
-            res = run_one(a, s, m, program=args.program, opts=opts, tag=args.tag)
+            res = run_one(a, s, m, program=args.program, opts=opts,
+                          clients_per_shard=args.clients_per_shard,
+                          tag=args.tag)
         except Exception as e:  # a dry-run failure is a bug in the system
             failures += 1
             res = {"arch": a, "shape": s, "mesh": m, "status": "FAILED",

@@ -11,6 +11,11 @@ Three program kinds are built here and lowered by ``dryrun.py``:
                       by the PushSum proxy exchange, realized as a single
                       ``jax.lax.ppermute`` along the "pod" mesh axis
                       (Algorithm 1 lines 7–11).
+* ``hier_round_block_step`` — the TWO-LEVEL round-block: one shard of
+                      stacked clients per pod; the flat PushSum matrix is
+                      factored into a local intra-shard matmul plus at most
+                      two cross-shard ``ppermute``s per round (the engine's
+                      ``backend="hier"`` at production-mesh scale).
 * ``prefill_step`` / ``decode_step`` — inference on the client's private
                       model (the paper: "After training, a client's private
                       model can be used for inference").
@@ -30,7 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import InputShape, ModelConfig, ProxyFLConfig
 from ..core.dp import dp_gradient_chunked, non_dp_gradient
-from ..core.gossip import gossip_shift, shard_map_fn
+from ..core.gossip import gossip_shift, hier_mix_schedule, shard_map_fn
 from ..nn.losses import dml_loss
 from ..nn.model import forward, init_cache, init_model
 from ..nn.modules import tree_flatten_vector, tree_unflatten_vector
@@ -340,6 +345,95 @@ def make_round_block_step(cfg_priv: ModelConfig, cfg_proxy: ModelConfig,
                 lambda kk: jax.random.fold_in(kk, t0 + i))(keys)
             stacked_state, m = round_step(stacked_state, stacked_batch,
                                           round_keys)
+            ms.append(m)
+        metrics = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ms)
+        return stacked_state, metrics
+
+    return block_step
+
+
+def make_hier_round_block_step(cfg_priv: ModelConfig, cfg_proxy: ModelConfig,
+                               fl: ProxyFLConfig, mesh, n_shards: int,
+                               clients_per_shard: int,
+                               opts: StepOptions = StepOptions(),
+                               n_rounds: int = 4, t0: int = 0):
+    """Two-level (hier) fused round-block: one SHARD of ``clients_per_shard``
+    clients per pod, ``n_shards`` = pod count. Each round the flat PushSum
+    matrix P^(t) is factored by edge locality (``hier_mix_schedule``): the
+    block-diagonal intra-shard part runs as a LOCAL [L, L] matmul over each
+    pod's stacked clients (no wire traffic), and the at-most-one cross-shard
+    edge per client is realized as a distributed roll — the uniform shift
+    σ(t) decomposed as ``q·L + r`` needs at most two ``ppermute``s of the
+    [L, D] shard block along "pod" (rounds with σ(t) < L that stay inside
+    the shard boundary need at most one). Per-client wire bytes stay O(D),
+    independent of K — the paper's O(1)-per-round communication claim at
+    the two-level scale ``dryrun.py --program hier_block`` lowers."""
+    dml = make_train_step(cfg_priv, cfg_proxy, fl, opts)
+    S, L = n_shards, clients_per_shard
+    K = S * L
+
+    def make_exchange(t):
+        shift = gossip_shift(t, K, fl.topology) % K
+        if shift == 0:
+            return None
+        blocks, _src, scale = hier_mix_schedule("pushsum", t, 1, K, S,
+                                                fl.topology)
+        blocks0 = jnp.asarray(blocks[0], jnp.float32)  # [S, L, L]
+        scale0 = jnp.asarray(scale[0], jnp.float32)    # [K]
+        q, r = divmod(shift, L)
+
+        def body(x, w, blk, sc):
+            # per-pod view: x [L, D], w [L], blk [1, L, L], sc [L]
+            intra = jnp.einsum("ij,jd->id", blk[0], x)
+            wm = jnp.einsum("ij,j->i", blk[0], w)
+
+            def from_pods_back(offset, arr):
+                # deliver pod (s - offset)'s block to pod s; offset ≡ 0
+                # (mod S) is the pod's own block — no collective
+                if offset % S == 0:
+                    return arr
+                perm = [(p, (p + offset) % S) for p in range(S)]
+                return jax.lax.ppermute(arr, "pod", perm)
+
+            ax, aw = from_pods_back(q, x), from_pods_back(q, w)
+            if r:
+                # client j's source j-σ straddles two source shards when
+                # σ is not a multiple of L: last r rows come from one pod
+                # further back
+                bx, bw = from_pods_back(q + 1, x), from_pods_back(q + 1, w)
+                rx = jnp.concatenate([bx[L - r:], ax[:L - r]], axis=0)
+                rw = jnp.concatenate([bw[L - r:], aw[:L - r]], axis=0)
+            else:
+                rx, rw = ax, aw
+            # sc is zero on rows whose σ-edge stayed intra-shard (those
+            # rows were already mixed by the block matmul above)
+            return intra + sc[:, None] * rx, wm + sc * rw
+
+        sm = shard_map_fn(body, mesh,
+                          in_specs=(P("pod"), P("pod"), P("pod"), P("pod")),
+                          out_specs=(P("pod"), P("pod")))
+        return lambda flat, w: sm(flat, w, blocks0, scale0)
+
+    exchanges = [make_exchange(t0 + i) for i in range(n_rounds)]
+
+    def block_step(stacked_state, stacked_batch, keys):
+        ms = []
+        for i, ex in enumerate(exchanges):
+            round_keys = jax.vmap(
+                lambda kk: jax.random.fold_in(kk, t0 + i))(keys)
+            new_state, m = jax.vmap(dml)(stacked_state, stacked_batch,
+                                         round_keys)
+            if ex is not None:
+                theta = new_state["proxy"]["params"]
+                flat = jax.vmap(tree_flatten_vector)(theta)   # [K, D]
+                mixed, w2 = ex(flat, new_state["w"])
+                unb = mixed / jnp.maximum(w2, 1e-9)[:, None]  # de-bias θ/w
+                theta2 = jax.vmap(lambda v: tree_unflatten_vector(
+                    v, jax.tree_util.tree_map(lambda a: a[0], theta)))(unb)
+                new_state = dict(new_state)
+                new_state["proxy"] = dict(new_state["proxy"], params=theta2)
+                new_state["w"] = w2
+            stacked_state = new_state
             ms.append(m)
         metrics = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ms)
         return stacked_state, metrics

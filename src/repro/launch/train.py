@@ -18,7 +18,12 @@ per-round execution, with checkpoints landing on block edges.
 heterogeneous experiments). ``--backend async --staleness T`` switches to
 the stale-gossip exchange: the round-t mix merges neighbor proxy mass put
 in flight τ rounds earlier (communication overlapped with the local
-scans, Assran et al. 2019; τ=0 is bit-identical to vmap). ``--dropout-rate``
+scans, Assran et al. 2019; τ=0 is bit-identical to vmap). ``--backend hier
+--n-shards S`` runs the two-level cohort: block-diagonal intra-shard
+matmul mixing plus at-most-one sparse cross-shard edge per client per
+round — the same flat ``mix_schedule`` matrices factored by edge
+locality, bit-identical to vmap at τ=0; ``--staleness`` then delays only
+the cross-shard edges. ``--dropout-rate``
 exercises the §3.4 dropout/join scenario: clients sit rounds out and the
 time-varying gossip graph re-knits around them.
 
@@ -113,16 +118,27 @@ def main(argv=None) -> int:
     ap.add_argument("--topology", default="exponential",
                     choices=("exponential", "ring", "full"))
     ap.add_argument("--backend", default="vmap",
-                    choices=("loop", "vmap", "async"),
+                    choices=("loop", "vmap", "async", "hier"),
                     help="federation engine backend (vmap = one compiled "
                          "round program; async = staleness-τ stale gossip, "
-                         "see --staleness; shard_map needs a multi-device "
+                         "see --staleness; hier = two-level cohort of "
+                         "--n-shards shards with block-diagonal intra-shard "
+                         "mixing and sparse cross-shard edges, see "
+                         "--n-shards; shard_map needs a multi-device "
                          "mesh, see dryrun.py)")
     ap.add_argument("--staleness", type=int, default=0,
-                    help="gossip delay τ for --backend async: the round-t "
-                         "exchange merges neighbor proxy mass sent τ rounds "
-                         "earlier (communication overlapped with the local "
-                         "scans); 0 is bit-identical to the vmap backend")
+                    help="gossip delay τ for --backend async or hier: the "
+                         "round-t exchange merges neighbor proxy mass sent "
+                         "τ rounds earlier (communication overlapped with "
+                         "the local scans); with hier only the CROSS-SHARD "
+                         "edges are delayed; 0 is bit-identical to the "
+                         "vmap backend")
+    ap.add_argument("--n-shards", type=int, default=1,
+                    help="two-level cohort layout for --backend hier: "
+                         "n_shards shards of clients/n_shards clients each "
+                         "(must divide evenly); 1 keeps every edge "
+                         "intra-shard and runs the vmap round programs "
+                         "verbatim")
     ap.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client dropout probability (§3.4)")
     ap.add_argument("--min-active", type=int, default=1,
@@ -180,14 +196,17 @@ def main(argv=None) -> int:
         weight_decay=args.weight_decay, batch_size=args.batch,
         topology=args.topology, seed=args.seed,
         dropout_rate=args.dropout_rate, min_active=args.min_active,
-        staleness=args.staleness,
+        staleness=args.staleness, n_shards=args.n_shards,
         use_pallas=args.use_pallas, compress=args.compress,
         compress_ratio=args.compress_ratio,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,
                     noise_multiplier=args.sigma))
-    if args.staleness and args.backend != "async":
-        raise SystemExit("--staleness requires --backend async "
+    if args.staleness and args.backend not in ("async", "hier"):
+        raise SystemExit("--staleness requires --backend async or hier "
                          "(the synchronous backends deliver every round)")
+    if args.n_shards > 1 and args.backend != "hier":
+        raise SystemExit("--n-shards > 1 requires --backend hier "
+                         "(the flat backends have no shard level)")
     opts = StepOptions(remat=False, accum=1, dp_chunk=args.batch)
 
     key = jax.random.PRNGKey(args.seed)

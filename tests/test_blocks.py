@@ -52,6 +52,31 @@ def _final_flats(res):
 
 
 @pytest.mark.fast
+def test_hier_blocks_stack_and_compile_once(fed_data, mlp_spec):
+    """A multi-block hier run pads/stacks the cohort data exactly ONCE and
+    compiles exactly ONE block program: the factored exchange schedule
+    (blocks/src/scale) enters as a runtime argument, so every later block
+    must hit both the stacked-data cache and the compiled scan — a
+    per-block re-stack or re-trace would silently destroy the amortized
+    round-block throughput fig_hier claims."""
+    cfg = ProxyFLConfig(n_clients=K, rounds=8, batch_size=50, local_steps=1,
+                        n_shards=2, staleness=2, dp=DPConfig(enabled=False))
+    eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                              backend="hier")
+    eng._data_cache.clear()
+    eng._stack_misses = 0
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    misses, progs = [], []
+    for blk in range(4):
+        state, _ = eng.run_rounds(state, fed_data, blk * 2, 2, key)
+        misses.append(eng._stack_misses)
+        progs.append(len(eng._rounds))
+    assert misses == [1, 1, 1, 1], f"per-block stack misses grew: {misses}"
+    assert progs == [1, 1, 1, 1], f"per-block program count grew: {progs}"
+
+
+@pytest.mark.fast
 def test_run_rounds_metrics_stacked_per_round(fed_data, mlp_spec):
     """run_rounds returns [n_rounds, K] metric trajectories matching the
     per-round run_round values bit-for-bit (NaN rows for §3.4 dropouts)."""

@@ -1,7 +1,7 @@
 """Cross-backend conformance matrix: ONE table-driven suite asserting that
 every execution backend of the FederationEngine — loop, vmap, shard_map
-(1-device), async-τ0 and async-τ>0 — agrees across methods, §3.4 dropout,
-ragged cohorts and round-block sizes. This file replaces the ad-hoc
+(1-device), async-τ0/τ>0 and the two-level hier backend — agrees across
+methods, §3.4 dropout, ragged cohorts and round-block sizes. This file replaces the ad-hoc
 pairwise equivalence tests previously scattered across test_engine.py,
 test_blocks.py and test_ragged.py.
 
@@ -56,6 +56,17 @@ use_pallas, compress)`` — to compress one side only.
     float divergence can flip a top-k selection or an int8 rounding
     decision, so agreement is bounded by the quantization granularity,
     not by fp epsilon.
+
+The ``hier-*`` cases pin the two-level [``n_shards`` × clients-per-shard]
+backend: ``n_shards=1`` runs the vmap round programs VERBATIM (the
+bit-identity anchor the acceptance bar names), ``n_shards>1`` executes
+the SAME flat ``mix_schedule`` matrices factored by edge locality
+(block-diagonal intra-shard matmul + at-most-one cross-shard edge per
+client) — still ``exact`` at τ=0 because the zero cross-block entries the
+dense matmul sums contribute exactly 0.0, hier τ>0 round-blocks are
+bit-identical to per-round (the cross-shard in-flight buffer rides the
+scan carry), epsilon is τ- and shard-invariant, and ``compress="none"``
+stays bitwise (n_shards>1 refuses real codecs at construction).
 
 The ``fast``-marked subset is the CI smoke (scripts/ci.sh --fast): it
 covers loop==vmap, ragged-on-vmap, block bit-identity, the async-τ0
@@ -136,7 +147,7 @@ def _c(id, ref, cands, **kw):
     cfg = {k: kw.pop(k) for k in list(kw)
            if k in ("rounds", "local_steps", "dropout_rate", "staleness",
                     "dp", "seed", "use_pallas", "compress",
-                    "compress_ratio")}
+                    "compress_ratio", "n_shards")}
     return Case(id=id, ref=ref, cands=tuple(cands),
                 cfg=tuple(sorted(cfg.items())), **kw)
 
@@ -248,6 +259,28 @@ CASES = [
        staleness=2, dropout_rate=0.25, compress="int8"),
     _c("compress-topk-ragged", ("vmap", 1), [("vmap", 2)], data="ragged",
        rounds=2, local_steps=0, dp=True, compress="topk"),
+    # -- hier two-level backend: n_shards=1 IS the vmap program (bitwise
+    #    anchor); n_shards>1 factors the SAME flat P^(t) block-diagonally
+    #    and stays exact at τ=0; τ>0 blocked == per-round with the
+    #    cross-shard buffer in the scan carry; epsilon τ/shard-invariant -
+    _c("hier-s1-vs-vmap", ("vmap", 1), [("hier", 1), ("hier", 3)],
+       fast=True, rounds=3, local_steps=2, dp=True, n_shards=1),
+    _c("hier-t0-s2-vs-vmap", ("vmap", 1), [("hier", 1), ("hier", 2)],
+       fast=True, rounds=4, local_steps=2, dp=True, dropout_rate=0.25,
+       n_shards=2),
+    _c("hier-vs-loop", ("loop", 1), [("hier", 1)], expect="close",
+       rounds=2, local_steps=2, dp=True, n_shards=2),
+    _c("hier-t0-ragged", ("vmap", 1), [("hier", 1), ("hier", 2)],
+       data="ragged", rounds=2, local_steps=0, dp=True, n_shards=2),
+    _c("hier-t2-blocks-bitwise", ("hier", 1), [("hier", 2), ("hier", 4)],
+       fast=True, rounds=4, local_steps=2, dp=True, dropout_rate=0.25,
+       staleness=2, n_shards=2),
+    _c("hier-t2-epsilon-matches-sync", ("vmap", 1), [("hier", 1)],
+       expect="epsilon", rounds=3, local_steps=2, dp=True, staleness=2,
+       n_shards=2),
+    _c("hier-compress-none-bitwise", ("hier", 1),
+       [("hier", 1, False, "none")], rounds=2, local_steps=2, dp=True,
+       n_shards=2),
 ]
 
 
@@ -331,7 +364,7 @@ def test_conformance_table_sanity():
     ids = [c.id for c in CASES]
     assert len(ids) == len(set(ids))
     backends = {run[0] for c in CASES for run in (c.ref,) + c.cands}
-    assert {"loop", "vmap", "async", None} <= backends
+    assert {"loop", "vmap", "async", "hier", None} <= backends
     missing = set(METHODS) - {c.method for c in CASES}
     assert not missing, f"METHODS without a conformance case: {missing}"
     assert any(dict(c.cfg).get("staleness") for c in CASES)
@@ -359,6 +392,20 @@ def test_conformance_table_sanity():
                and any(r[1] > 1 for r in c.cands) for c in CASES)
     assert any(dict(c.cfg).get("compress") and dict(c.cfg).get("staleness")
                for c in CASES)
+    # the hier two-level backend must keep: the n_shards=1 vmap-verbatim
+    # anchor, an n_shards>1 EXACT column, a τ>0 block bit-identity case,
+    # a ragged column and a compress-none bitwise column
+    hier_cases = [c for c in CASES
+                  if any(r[0] == "hier" for r in (c.ref,) + c.cands)]
+    assert any(dict(c.cfg).get("n_shards") == 1 and c.expect == "exact"
+               for c in hier_cases)
+    assert any(dict(c.cfg).get("n_shards", 1) > 1 and c.expect == "exact"
+               for c in hier_cases)
+    assert any(dict(c.cfg).get("staleness")
+               and any(r[1] > 1 for r in c.cands) for c in hier_cases)
+    assert any(c.data == "ragged" for c in hier_cases)
+    assert any(len(r) > 3 and r[3] == "none"
+               for c in hier_cases for r in (c.ref,) + c.cands)
 
 
 @pytest.mark.fast
@@ -416,6 +463,29 @@ def test_shard_map_k1_matches_vmap_bitwise(datasets, mlp_spec):
         finals[label] = np.asarray(
             jax.vmap(tree_flatten_vector)(state["proxy"]["params"]))
     np.testing.assert_array_equal(finals["vmap"], finals["shard_map"])
+
+
+def test_hier_engine_k8_s4_matches_vmap_bitwise(mlp_spec):
+    """K=8, S=4 at engine level: the exponential shift classes {1, 2, 4}
+    exercise every (q, r) = divmod(shift, L) split of the factored
+    cross-shard edge — pure cross-permutation (q odd, r=0), intra-only
+    (shift < L) and the mixed case — so the blockdiag+scatter execution
+    must reproduce the dense vmap matmul bit-for-bit on all of them."""
+    cfg = ProxyFLConfig(n_clients=8, rounds=3, batch_size=50, local_steps=1,
+                        n_shards=4, dp=DPConfig(enabled=False))
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_data(key, 400, SHAPE, N_CLASSES, sep=2.0)
+    data = [(x[i * 50:(i + 1) * 50], y[i * 50:(i + 1) * 50])
+            for i in range(8)]
+    finals = {}
+    for backend in ("vmap", "hier"):
+        eng = single_model_engine(mlp_spec, cfg, False, mix="pushsum",
+                                  backend=backend, n_clients=8)
+        state = eng.init_states(key)
+        state, _ = eng.run_rounds(state, data, 0, cfg.rounds, key)
+        finals[backend] = np.asarray(
+            jax.vmap(tree_flatten_vector)(state["proxy"]["params"]))
+    np.testing.assert_array_equal(finals["vmap"], finals["hier"])
 
 
 # ---------------------------------------------------------------------------

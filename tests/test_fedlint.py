@@ -156,6 +156,20 @@ def test_carry_coverage_fires_on_uncheckpointed_key(tmp_path):
     assert all("never_checkpointed" in f.message for f in fs)
 
 
+def test_carry_coverage_fires_on_dropped_hier_buffer(tmp_path):
+    """Deleting the hier cross-shard buffer from ``_ckpt_payload`` on a
+    copy of the REAL engine must be a finding: a hier-τ>0 resume without
+    the in-flight buffer silently replays a different trajectory."""
+    src = (REPO / "src/repro/core/engine.py").read_text()
+    line = '            payload["hier_buffer"] = state["hier_buffer"]\n'
+    assert line in src, "engine _ckpt_payload hier line moved — update test"
+    root = tree(tmp_path, {"src/repro/core/engine.py":
+                           src.replace(line, "", 1)})
+    fs = lint(root, ["src"], select=["FED003"])
+    assert len(fs) == 1, [f.message for f in fs]
+    assert "hier_buffer" in fs[0].message
+
+
 # ---------------------------------------------------------------------------
 # FED004 fingerprint-coverage (perturbs copies of the REAL sources)
 # ---------------------------------------------------------------------------

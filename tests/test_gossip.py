@@ -9,7 +9,9 @@ from _hypothesis_compat import given, st
 
 from repro.core.gossip import (adjacency_matrix, adjacency_schedule,
                                comm_cost_per_round, debias,
-                               exponential_offsets, gossip_shift, mix_matrix,
+                               exponential_offsets, gossip_shift,
+                               hier_gossip_reference, hier_layout,
+                               hier_mix_schedule, hier_mix_split, mix_matrix,
                                mix_schedule, pushsum_mix, shift_schedule,
                                stale_gossip_reference, stale_mix_schedule)
 
@@ -331,6 +333,174 @@ def test_stale_consensus_is_fixed_point():
     Ps = [mix_matrix("pushsum", t, K, "exponential") for t in range(T)]
     got_z, got_w, _, _ = stale_gossip_reference(z, np.ones(K), Ps, tau)
     np.testing.assert_allclose(got_z, z, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical gossip (hier backend): block-diag + cross-permutation
+# factoring of the SAME flat P^(t), with staleness on cross-shard edges only
+
+
+def _divisors(K):
+    return [s for s in range(1, K + 1) if K % s == 0]
+
+
+def _check_hier_split(mix, topology, t0, T, K, S, active):
+    L = K // S
+    for act in (None, active):
+        blocks, src, scale = hier_mix_schedule(mix, t0, T, K, S, topology,
+                                               active=act)
+        Ps = mix_schedule(mix, t0, T, K, topology, active=act)
+        assert blocks.shape == (T, S, L, L)
+        assert src.shape == (T, K) and scale.shape == (T, K)
+        shard = np.arange(K) // L
+        idx = np.arange(K)
+        for i in range(T):
+            # factoring is a SUM decomposition with disjoint supports:
+            # blockdiag(blocks) + scatter(src, scale) rebuilds P EXACTLY
+            recon = np.zeros((K, K))
+            for s in range(S):
+                recon[s * L:(s + 1) * L, s * L:(s + 1) * L] = blocks[i, s]
+            cross_rows = scale[i] != 0.0
+            recon[idx[cross_rows], src[i, cross_rows]] += scale[i, cross_rows]
+            np.testing.assert_array_equal(
+                recon, Ps[i],
+                err_msg=f"{mix}/{topology} K={K} S={S} t0={t0} round {i}")
+            # every cross edge really crosses a shard boundary; a client
+            # with no cross in-edge points at itself with weight 0
+            assert (shard[idx[cross_rows]] != shard[src[i, cross_rows]]).all()
+            np.testing.assert_array_equal(src[i, ~cross_rows],
+                                          idx[~cross_rows])
+
+
+@given(st.integers(0, 40), st.integers(1, 8),
+       st.sampled_from([(2, 2), (4, 2), (8, 4), (12, 3), (16, 16)]),
+       st.sampled_from(["exponential", "ring"]),
+       st.sampled_from(["pushsum", "ring", "none"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_hier_split_rebuilds_flat_schedule(t0, T, KS, topology, mix,
+                                           mask_seed):
+    K, S = KS
+    active = _random_active(np.random.default_rng(mask_seed), T, K)
+    _check_hier_split(mix, topology, t0, T, K, S, active)
+
+
+def test_hier_split_rebuilds_flat_schedule_deterministic():
+    rng = np.random.default_rng(23)
+    for mix in ("pushsum", "ring", "none"):
+        for K, t0, T in ((2, 0, 3), (4, 5, 4), (8, 2, 7), (16, 31, 5)):
+            for S in _divisors(K):
+                _check_hier_split(mix, "exponential", t0, T, K, S,
+                                  _random_active(rng, T, K))
+
+
+def test_hier_split_rejects_dense_cross_part():
+    """Dense mixing (mean / topology='full') has O(K) cross in-edges per
+    client — no O(1) collective schedule exists, so factoring must refuse
+    rather than silently densify (S=1 is fine: everything is intra)."""
+    P = mix_matrix("mean", 0, 8, "exponential")
+    hier_mix_split(P, 1)
+    for S in (2, 4, 8):
+        with pytest.raises(ValueError, match="cross-shard"):
+            hier_mix_split(P, S)
+
+
+def test_hier_layout_validation():
+    assert hier_layout(8, 4) == (4, 2)
+    assert hier_layout(6, 1) == (1, 6)
+    for bad in (0, 5, 9):
+        with pytest.raises(ValueError, match="n_shards"):
+            hier_layout(8, bad)
+
+
+def _check_hier_mass(K, T, tau, S, seed, active):
+    rng = np.random.default_rng(seed)
+    z0 = rng.normal(size=(K, 3))
+    w0 = np.ones(K)
+    Ps = [mix_matrix("pushsum", t, K, "exponential",
+                     None if active is None else active[t])
+          for t in range(T)]
+    theta0 = (z0 * w0[:, None]).sum()
+    for cut in range(1, T + 1):  # invariant holds after EVERY round
+        z, w, buf_t, buf_w = hier_gossip_reference(z0, w0, Ps[:cut], S, tau)
+        np.testing.assert_allclose(
+            (z * w[:, None]).sum() + buf_t.sum(), theta0, rtol=1e-9,
+            err_msg=f"theta mass lost at round {cut} (S={S}, tau={tau})")
+        np.testing.assert_allclose(
+            w.sum() + buf_w.sum(), w0.sum(), rtol=1e-12,
+            err_msg=f"w mass lost at round {cut} (S={S}, tau={tau})")
+        assert (w > 0).all()  # intra-shard sync mass keeps de-bias valid
+
+
+@given(st.sampled_from([(4, 2), (8, 2), (8, 4), (12, 3), (9, 3)]),
+       st.integers(1, 6), st.integers(0, 3), st.integers(0, 2 ** 31 - 1),
+       st.booleans())
+def test_hier_gossip_mass_conserved(KS, T, tau, seed, dropout):
+    """Σ z·w and Σ w over clients PLUS the cross-shard in-flight buffer are
+    conserved after every round for any (n_shards, τ, dropout) — the hier
+    twin of the async conservation law."""
+    K, S = KS
+    active = (_random_active(np.random.default_rng(seed + 1), T, K)
+              if dropout else None)
+    _check_hier_mass(K, T, tau, S, seed, active)
+
+
+def test_hier_gossip_mass_conserved_deterministic():
+    rng = np.random.default_rng(29)
+    for K, S, T, tau in ((4, 2, 5, 0), (8, 4, 6, 1), (8, 2, 4, 2),
+                         (12, 3, 5, 3), (16, 16, 4, 2)):
+        _check_hier_mass(K, T, tau, S, int(rng.integers(1e6)),
+                         _random_active(rng, T, K))
+
+
+def test_hier_reference_tau0_equals_flat_bitwise():
+    """At τ=0 the factored application must equal the flat synchronous
+    reference bit-for-bit, for EVERY shard count: with at most one
+    cross-shard in-edge per client the factored row sum performs the same
+    additions as the dense row dot (zeros add exactly), so n_shards is a
+    pure execution-layout parameter — the host-side half of the engine's
+    hier-τ0 == vmap bit-identity."""
+    K, D, T = 8, 5, 7
+    rng = np.random.default_rng(31)
+    z0 = rng.normal(size=(K, D))
+    w0 = np.ones(K)
+    active = _random_active(rng, T, K)
+    for act in (None, active):
+        Ps = [mix_matrix("pushsum", t, K, "exponential",
+                         None if act is None else act[t]) for t in range(T)]
+        ref = stale_gossip_reference(z0, w0, Ps, 0)
+        for S in _divisors(K):
+            got = hier_gossip_reference(z0, w0, Ps, S, 0)
+            np.testing.assert_array_equal(got[0], ref[0])
+            np.testing.assert_array_equal(got[1], ref[1])
+            assert got[2].shape == (0, K, D)
+
+
+def test_hier_one_client_per_shard_equals_stale():
+    """With L=1 every off-diagonal edge is cross-shard, so hier-τ must
+    reproduce the flat stale reference exactly: the async backend is the
+    S=K corner of the hier algebra."""
+    K, T = 8, 6
+    rng = np.random.default_rng(37)
+    z0 = rng.normal(size=(K, 4))
+    w0 = np.ones(K)
+    Ps = [mix_matrix("pushsum", t, K, "exponential") for t in range(T)]
+    for tau in (1, 2, 3):
+        got = hier_gossip_reference(z0, w0, Ps, K, tau)
+        ref = stale_gossip_reference(z0, w0, Ps, tau)
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(g, r, rtol=1e-12)
+
+
+def test_hier_consensus_is_fixed_point():
+    """Consensus survives partial-shard delay: mixing RAW numerators across
+    the cross-shard buffer keeps delivered mass paired with its weight."""
+    K, T = 12, 10
+    c = np.array([0.75, -1.25, 2.0])
+    z = np.tile(c, (K, 1))
+    Ps = [mix_matrix("pushsum", t, K, "exponential") for t in range(T)]
+    for S, tau in ((3, 1), (4, 2), (12, 3)):
+        got_z, got_w, _, _ = hier_gossip_reference(z, np.ones(K), Ps, S, tau)
+        np.testing.assert_allclose(got_z, z, rtol=1e-12)
 
 
 def test_comm_cost_scaling():

@@ -109,6 +109,10 @@ RNG_ALLOWED_SITES: Tuple[Allow, ...] = (
     Allow("src/repro/launch/steps.py", "make_round_block_step*",
           ("fold_in",),
           "dryrun round-block twin of the engine's in-scan round_key fold"),
+    Allow("src/repro/launch/steps.py", "make_hier_round_block_step*",
+          ("fold_in",),
+          "two-level (hier) round-block twin: same fold_in(keys, t) "
+          "per-round schedule as make_round_block_step, one shard per pod"),
     # --- module families with their own key ownership -------------------
     Allow("src/repro/nn/*.py", "*", ("split", "fold_in"),
           "parameter-init trees fan one init key out to sub-module inits; "
@@ -130,6 +134,7 @@ TRACED_FUNCTION_SITES: Tuple[Tuple[str, str], ...] = (
     ("src/repro/core/engine.py", "FederationEngine._local_phase*"),
     ("src/repro/core/engine.py", "FederationEngine._round_core*"),
     ("src/repro/core/engine.py", "FederationEngine._stale_round_core*"),
+    ("src/repro/core/engine.py", "FederationEngine._hier_round_core*"),
     ("src/repro/core/engine.py", "FederationEngine._build_block*"),
     ("src/repro/core/engine.py", "FederationEngine._one_step*"),
     ("src/repro/core/engine.py", "FederationEngine._mix_matmul_op*"),
@@ -138,6 +143,9 @@ TRACED_FUNCTION_SITES: Tuple[Tuple[str, str], ...] = (
     ("src/repro/core/gossip.py", "pushsum_mix"),
     ("src/repro/core/gossip.py", "pushsum_mix_debiased"),
     ("src/repro/core/gossip.py", "stale_mix_apply"),
+    ("src/repro/core/gossip.py", "_hier_intra"),
+    ("src/repro/core/gossip.py", "hier_mix_debiased"),
+    ("src/repro/core/gossip.py", "hier_stale_mix_apply"),
     ("src/repro/core/gossip.py", "debias"),
     ("src/repro/core/gossip.py", "pushsum_gossip_shard"),
     ("src/repro/core/compress.py", "_topk_encode_decode"),
