@@ -130,6 +130,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                   checkpoint_dir: str = None, checkpoint_every: int = 0,
                   resume: bool = None, use_pallas: bool = None,
                   compress: str = None, compress_ratio: float = None,
+                  verify_commitments: bool = None,
                   local_steps: int = None, lr: float = None,
                   weight_decay: float = None, topology: str = None,
                   min_active: int = None
@@ -161,7 +162,12 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
     ``REPRO_BENCH_COMPRESS_RATIO``) run every exchange through the
     compressed gossip protocol with error feedback ("none" | "topk" |
     "int8"; see repro.core.compress) — accuracy-vs-bytes tradeoffs are
-    measured by ``benchmarks/fig_compress.py``."""
+    measured by ``benchmarks/fig_compress.py``. ``verify_commitments``
+    (env ``REPRO_BENCH_VERIFY``) runs every figure with verifiable
+    federation on: received proxies are checked against their senders'
+    declared commitments before mixing (loop backend) and checkpoint
+    restores run in strict commitment mode (repro.core.commit) — the
+    verified trajectory is bit-identical to the unverified one."""
     backend = backend or os.environ.get("REPRO_BENCH_BACKEND", "auto")
     rounds_per_block = rounds_per_block or _env_int("REPRO_BENCH_BLOCK") or 1
     staleness = staleness or _env_int("REPRO_BENCH_STALENESS")
@@ -184,6 +190,8 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
         resume = _env_flag("REPRO_BENCH_RESUME")
     if use_pallas is None:
         use_pallas = _env_flag("REPRO_BENCH_PALLAS")
+    if verify_commitments is None:
+        verify_commitments = _env_flag("REPRO_BENCH_VERIFY")
     compress = compress or os.environ.get("REPRO_BENCH_COMPRESS", "").strip() \
         or None
     if compress_ratio is None:
@@ -223,6 +231,7 @@ def bench_methods(dataset: str, methods: Sequence[str], *, n_clients: int,
                 seed=seed, dropout_rate=dropout_rate, staleness=staleness,
                 n_shards=n_shards or 1,
                 use_pallas=bool(use_pallas),
+                verify_commitments=bool(verify_commitments),
                 dp=DPConfig(enabled=dp, noise_multiplier=sigma, clip_norm=clip),
                 **cfg_extra)
             res = run_federated(

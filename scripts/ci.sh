@@ -101,7 +101,7 @@ elif [[ "${1:-}" == "--bench" ]]; then
   exit 0
 elif [[ "${1:-}" == "--smoke" ]]; then
   shift
-  echo "== smoke: checkpoint/resume bit-identity (round-blocks + async-τ2 + hier-τ2) =="
+  echo "== smoke: checkpoint/resume bit-identity (round-blocks + async-τ2 + hier-τ2) + commitment verify-after-resume / refuse-after-bitflip =="
   python scripts/resume_smoke.py
   echo "CI OK"
   exit 0

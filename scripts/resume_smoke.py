@@ -10,10 +10,17 @@ Scenario (per backend, loop and vmap):
   2. "killed" run: same federation with ``--checkpoint-every 1``,
      terminated after round 2 (cfg.rounds=2 stands in for the kill).
   3. resumed run: rounds=3 + ``resume=True`` restarts from the round-2
-     snapshot and executes only the final round.
+     snapshot and executes only the final round — WITH
+     ``verify_commitments=True``, so the restore replays the whole
+     commitment chain in strict mode (and the loop backend additionally
+     verifies every received proxy digest in flight) before continuing.
+  4. refuse-after-bitflip: one mantissa bit of one committed proxy leaf
+     in the newest snapshot is flipped; the next resume must REFUSE with
+     a ``CommitmentError`` naming the divergent round and leaf path.
 Fails unless resumed == reference exactly (np.array_equal on every proxy
-AND private leaf, exact epsilon match), and unless the loop- and
-vmap-backend resumed runs agree within numerical tolerance.
+AND private leaf, exact epsilon match — verification observes state, it
+never changes it), and unless the loop- and vmap-backend resumed runs
+agree within numerical tolerance.
 
 The same contract is then enforced for FUSED round-blocks (vmap): the
 federation runs with ``rounds_per_block=2`` and ``checkpoint_every=2`` —
@@ -37,6 +44,7 @@ exactly (the FED003 carry-coverage contract, exercised end to end).
     PYTHONPATH=src python scripts/resume_smoke.py
 """
 import dataclasses
+import os
 import sys
 import tempfile
 
@@ -73,6 +81,34 @@ def flat(res, role):
                      for c in res["clients"]])
 
 
+def bitflip_refusal(backend: str, run, cfg, ckpt) -> None:
+    """Flip one mantissa bit of one committed proxy leaf in the newest
+    snapshot; the next resume must refuse, naming round and leaf."""
+    from repro.core.commit import CommitmentError
+
+    sub = os.path.join(ckpt["checkpoint_dir"], "proxyfl_s0")
+    latest = max(int(n[len("round_"):-len(".npz")]) for n in os.listdir(sub)
+                 if n.startswith("round_") and n.endswith(".npz"))
+    npz_path = os.path.join(sub, f"round_{latest:06d}.npz")
+    with np.load(npz_path) as f:
+        arrays = {k: f[k] for k in f.files}
+    leaf = next(k for k in sorted(arrays) if "/proxy/params/" in k)
+    arrays[leaf].reshape(-1).view(np.uint32)[0] ^= 1
+    np.savez(npz_path, **arrays)
+    try:
+        run(cfg, resume=True, **ckpt)
+    except CommitmentError as e:
+        if e.round != latest or not e.leaf or e.leaf not in str(e):
+            raise SystemExit(
+                f"[resume-smoke:{backend}] FAIL: refusal did not name the "
+                f"divergent round/leaf (round={e.round}, leaf={e.leaf})")
+        print(f"[resume-smoke:{backend}] OK — bit-flipped snapshot leaf "
+              f"refused (round {e.round}, c{e.client:04d}/{e.leaf})")
+    else:
+        raise SystemExit(f"[resume-smoke:{backend}] FAIL: tampered snapshot "
+                         "was restored instead of refused")
+
+
 def run_backend(backend: str) -> np.ndarray:
     spec, data, test, cfg = build_federation()
     run = lambda c, **kw: run_federated("proxyfl", [spec] * K, spec, data,
@@ -82,7 +118,10 @@ def run_backend(backend: str) -> np.ndarray:
     with tempfile.TemporaryDirectory() as d:
         ckpt = dict(checkpoint_dir=d, checkpoint_every=1)
         run(dataclasses.replace(cfg, rounds=KILL_AFTER), **ckpt)  # "killed"
-        resumed = run(cfg, resume=True, **ckpt)
+        # strict commitment mode: the restore replays the hash chain and
+        # recomputes the snapshot's leaf digests before any state is used
+        resumed = run(cfg, resume=True, verify_commitments=True, **ckpt)
+        bitflip_refusal(backend, run, cfg, ckpt)
 
     failures = []
     for role in ("proxy_params", "private_params"):
@@ -97,7 +136,8 @@ def run_backend(backend: str) -> np.ndarray:
         raise SystemExit(f"[resume-smoke:{backend}] FAIL: "
                          + "; ".join(failures))
     print(f"[resume-smoke:{backend}] OK — killed@{KILL_AFTER}/{ROUNDS} "
-          f"resume is bit-identical (eps={resumed['epsilon'][0]:.3f})")
+          f"verified resume is bit-identical "
+          f"(eps={resumed['epsilon'][0]:.3f})")
     return flat(resumed, "proxy_params")
 
 
@@ -115,7 +155,7 @@ def run_blocked() -> None:
         blk = dict(checkpoint_dir=d, checkpoint_every=KILL_AFTER,
                    rounds_per_block=KILL_AFTER)
         run(dataclasses.replace(cfg, rounds=KILL_AFTER), **blk)  # "killed"
-        resumed = run(cfg, resume=True, **blk)
+        resumed = run(cfg, resume=True, verify_commitments=True, **blk)
 
     failures = []
     for role in ("proxy_params", "private_params"):
@@ -148,7 +188,8 @@ def run_async_stale() -> None:
     with tempfile.TemporaryDirectory() as d:
         ckpt = dict(checkpoint_dir=d, checkpoint_every=2)
         run(dataclasses.replace(cfg, rounds=4), cfg.rounds, **ckpt)  # killed
-        resumed = run(cfg, cfg.rounds, resume=True, **ckpt)
+        resumed = run(cfg, cfg.rounds, resume=True, verify_commitments=True,
+                      **ckpt)
 
     failures = []
     for role in ("proxy_params", "private_params"):
@@ -181,7 +222,8 @@ def run_hier_stale() -> None:
     with tempfile.TemporaryDirectory() as d:
         ckpt = dict(checkpoint_dir=d, checkpoint_every=2)
         run(dataclasses.replace(cfg, rounds=4), cfg.rounds, **ckpt)  # killed
-        resumed = run(cfg, cfg.rounds, resume=True, **ckpt)
+        resumed = run(cfg, cfg.rounds, resume=True, verify_commitments=True,
+                      **ckpt)
 
     failures = []
     for role in ("proxy_params", "private_params"):

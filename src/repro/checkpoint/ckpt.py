@@ -44,6 +44,13 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     return flat
 
 
+# public alias: the commitment layer (repro.core.commit) flattens proxy
+# trees with THE SAME path convention the npz uses, so a commitment
+# computed from live state and one recomputed from the checkpoint agree
+# by construction
+flatten_with_paths = _flatten_with_paths
+
+
 def _npz_path(path: str) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 

@@ -279,3 +279,15 @@ class ProxyFLConfig:
     # use_pallas falls back to the plain-XLA exchange while compressing.
     compress: str = "none"  # "none" | "topk" | "int8"
     compress_ratio: float = 0.25  # top-k kept fraction of D
+    # Verifiable federation (repro.core.commit): verify proxy commitments.
+    # On the loop backend every received proxy's chunked-leaf digest is
+    # recomputed and checked against the sender's declared commitment
+    # BEFORE mixing (a tampered in-flight proxy refuses with a
+    # CommitmentError naming client and round), and checkpoint restores
+    # run in strict mode — snapshots without commitment records or a
+    # recorded config fingerprint are refused instead of warned about.
+    # Chain/digest MISMATCHES on restore are refused regardless of this
+    # flag. Off by default: verification observes state but never changes
+    # it (the verified trajectory is bit-identical), so the flag is
+    # excluded from the config fingerprint.
+    verify_commitments: bool = False

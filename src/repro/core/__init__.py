@@ -5,9 +5,11 @@
 - ``gossip``      PushSum on time-varying directed graphs (§3.4)
 - ``protocol``    Algorithm 1: DML client step + gossip round
 - ``engine``      FederationEngine: loop/vmap/shard_map round executor
+- ``commit``      hash-chained proxy commitments (verifiable federation)
 - ``baselines``   FedAvg / FML / AvgPush / CWT / Regular / Joint (§4.1)
 """
 from .accountant import PrivacyAccountant, epsilon_for, rdp_sampled_gaussian, rdp_to_eps
+from .commit import CommitmentError, chain_step, client_commitment, leaf_digest
 from .dp import add_gaussian_noise, clip_by_global_norm, dp_gradient, non_dp_gradient
 from .engine import FederationEngine, active_mask, dml_engine, single_model_engine
 from .gossip import (
@@ -36,6 +38,7 @@ from .baselines import METHODS, final_mean_acc, run_federated
 __all__ = [
     "PrivacyAccountant", "epsilon_for", "rdp_sampled_gaussian", "rdp_to_eps",
     "add_gaussian_noise", "clip_by_global_norm", "dp_gradient", "non_dp_gradient",
+    "CommitmentError", "chain_step", "client_commitment", "leaf_digest",
     "FederationEngine", "active_mask", "dml_engine", "single_model_engine",
     "adjacency_matrix", "comm_cost_per_round", "debias", "exponential_offsets",
     "gossip_shift", "mix_matrix", "pushsum_gossip_shard", "pushsum_mix",

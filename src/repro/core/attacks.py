@@ -15,7 +15,7 @@ leaks; this is what makes releasing the proxy (and only the proxy) safe.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,13 @@ def auc_from_scores(member_scores: np.ndarray,
                     nonmember_scores: np.ndarray) -> float:
     """Rank-based AUC of the attacker that predicts 'member' for LOWER
     scores (losses). 0.5 = chance; 1.0 = perfect membership inference."""
-    m, n = member_scores, nonmember_scores
+    m, n = np.asarray(member_scores), np.asarray(nonmember_scores)
+    if len(m) == 0 or len(n) == 0:
+        raise ValueError(
+            f"auc_from_scores needs non-empty score arrays on both sides "
+            f"(got {len(m)} member, {len(n)} non-member scores) — an AUC "
+            "over an empty class is undefined, not 0.5; check the "
+            "member/non-member split upstream")
     # Mann-Whitney U via tie-averaged ranks:
     all_scores = np.concatenate([m, n])
     _, inv, counts = np.unique(all_scores, return_inverse=True,
@@ -56,6 +62,26 @@ def auc_from_scores(member_scores: np.ndarray,
     u = ranks[: len(m)].sum() - len(m) * (len(m) + 1) / 2.0
     auc_high = u / (len(m) * len(n))  # P(member loss > nonmember loss)
     return float(1.0 - auc_high)      # members should have LOWER loss
+
+
+def bitflip_proxy(client: int, *, bit: int = 0, index: int = 0,
+                  rounds: Optional[Tuple[int, ...]] = None) -> Callable:
+    """Byzantine tamper model for the engine's ``transmit_tamper`` hook:
+    flip bit ``bit`` of float32 element ``index`` of client ``client``'s
+    TRANSMITTED proxy vector — the smallest possible in-flight corruption,
+    which commitment verification must still catch
+    (``cfg.verify_commitments``; see ``FederationEngine._verified_
+    exchange``). ``rounds`` restricts the attack to those round indices
+    (None = every round). Returns ``tamper(flat [K, D] numpy, t) -> flat``.
+    """
+    def tamper(flat: np.ndarray, t: int) -> np.ndarray:
+        if rounds is not None and t not in rounds:
+            return flat
+        out = np.array(flat, dtype=np.float32, copy=True)
+        row = out[client].view(np.uint32)
+        row[index] ^= np.uint32(1 << bit)
+        return out
+    return tamper
 
 
 def loss_threshold_mia(apply_fn: Callable, params,

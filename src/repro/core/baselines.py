@@ -118,7 +118,8 @@ def _checkpointer(checkpoint_dir, checkpoint_every, method: str,
                             proxy=proxy_spec.name)
     return FederationCheckpointer(
         os.path.join(checkpoint_dir, f"{method}_s{seed}"),
-        every=checkpoint_every or 1, fingerprint=fp)
+        every=checkpoint_every or 1, fingerprint=fp,
+        verify=cfg.verify_commitments)
 
 
 def _eval_clients(engine, state, specs, role: str, xt, yt) -> List[float]:
@@ -191,6 +192,8 @@ def run_federated(
     compress: Optional[str] = None,
     compress_ratio: Optional[float] = None,
     n_shards: Optional[int] = None,
+    verify_commitments: Optional[bool] = None,
+    transmit_tamper=None,
 ) -> Dict:
     """Run ``cfg.rounds`` rounds of ``method``; return history + final state.
 
@@ -229,10 +232,22 @@ def run_federated(
     two-level cohort layout of ``backend="hier"`` — the shard count of
     the [n_shards × clients-per-shard] factored exchange; the other
     backends ignore it.
+
+    ``verify_commitments`` overrides ``cfg.verify_commitments`` (None
+    keeps the config): verifiable federation (``repro.core.commit``) —
+    received proxies are checked against their senders' declared
+    commitments before mixing (loop backend) and checkpoint restores run
+    in strict commitment mode. ``transmit_tamper`` injects a byzantine
+    wire adversary (``(flat [K, D] numpy, t) -> flat``, e.g.
+    ``repro.core.attacks.bitflip_proxy``) into the loop backend's
+    exchange — the hook the tamper-detection tests drive.
     """
     assert method in METHODS, method
     if use_pallas is not None:
         cfg = dataclasses.replace(cfg, use_pallas=use_pallas)
+    if verify_commitments is not None:
+        cfg = dataclasses.replace(cfg,
+                                  verify_commitments=bool(verify_commitments))
     if compress is not None:
         cfg = dataclasses.replace(cfg, compress=compress)
     if compress_ratio is not None:
@@ -288,6 +303,10 @@ def run_federated(
         roles = [("acc", proxy_spec, "proxy")]
         rounds_done = engine_cfg.rounds
 
+    # engines are LRU-cached by config and the hook is not part of the
+    # cache key — assign unconditionally so a previous run's adversary
+    # cannot leak into this run's (clean) exchange
+    engine.transmit_tamper = transmit_tamper
     state = _drive_blocks(
         engine, state, list(client_data), start, rounds_done, key, ckpt,
         eval_every, rounds_per_block,

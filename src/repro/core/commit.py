@@ -1,0 +1,175 @@
+"""Per-round proxy commitments — the hash-chained audit trail.
+
+The paper targets regulated domains (finance/healthcare) where a
+participant must be able to prove that the proxy it gossips is the proxy
+it trained. This module is the commitment layer under that claim, modeled
+on chunked per-round parameter commitments (FL-ZKP style) without
+committing to a full ZKP stack:
+
+* every RELEASED proxy is committed to by a **client commitment** — a
+  sha256 over the sorted ``(leaf path, chunked leaf digest)`` pairs of its
+  parameter tree, where each leaf digest is a sha256 over fixed-size-chunk
+  sha256 digests of the leaf's canonical bytes (the same dtype
+  canonicalization ``save_checkpoint`` applies, so a commitment computed
+  from live state and one recomputed from the ``.npz`` agree bit-for-bit);
+* snapshots form a **hash chain** ``h_t = H(h_{t-1} || round metadata ||
+  client commitments)`` anchored at :data:`GENESIS` — rewriting any past
+  round breaks every later link;
+* mismatches raise :class:`CommitmentError` (a distinct error from the
+  config-fingerprint mismatch) naming the first divergent round and, for
+  leaf-level tampering, the offending leaf path.
+
+Everything here is host-side ``hashlib`` + ``numpy`` over the
+backend-portable canonical payload (the per-client layout
+``FederationEngine.save_state`` gathers), so commitments are
+backend-invariant by construction: loop, vmap and hier snapshots of the
+same state hash identically. The chain's round metadata deliberately
+contains only backend-invariant facts (``rounds_done``, ``n_clients``) —
+run-identity (lr, DP budget, architectures, ...) is the config
+fingerprint's job, checked separately with its own error.
+
+Consumers: :class:`repro.checkpoint.federation.FederationCheckpointer`
+(stamps ``commitment``/``prev_commitment`` into every ``.meta.json``,
+appends to ``audit.jsonl``, verifies on restore) and the loop backend of
+:class:`repro.core.engine.FederationEngine` (verifies received-proxy
+digests against the sender's declared commitment before mixing, under
+``cfg.verify_commitments``).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint.ckpt import flatten_with_paths
+
+# Chain anchor: h_0's predecessor. A fixed public constant (not a secret,
+# not per-run) — the chain's security comes from the links, not the root.
+GENESIS = "0" * 64
+
+# Leaves are digested in fixed 1 MiB chunks of their canonical bytes and
+# the chunk digests are hashed together (FL-ZKP style chunked commitment):
+# large proxies stream through sha256 without a monolithic buffer, and a
+# future Merkle/ZKP layer can open single chunks without rehashing the
+# whole tensor. The chunk size is part of the commitment definition —
+# changing it changes every digest, so it is a named constant, not a knob.
+CHUNK_BYTES = 1 << 20
+
+# Key-path namespace of the committed leaves inside a snapshot payload:
+# clients/c0042/proxy/params/<leaf...> — only the RELEASED proxy is
+# committed (private models never leave the client and are deliberately
+# outside the audit trail).
+CLIENT_KEY_FMT = "c{:04d}"
+PROXY_PREFIX = "proxy/params/"
+
+
+class CommitmentError(ValueError):
+    """A proxy commitment failed verification.
+
+    Distinct from the config-fingerprint ``ValueError`` so callers (and
+    tests) can tell *state tampering* apart from *configuration drift*.
+    ``round`` is the first divergent rounds_done (None when the failure is
+    not round-specific), ``leaf`` the offending leaf path within the
+    client's proxy tree, ``client`` the client index — whichever are known.
+    """
+
+    def __init__(self, message: str, *, round: Optional[int] = None,
+                 leaf: Optional[str] = None, client: Optional[int] = None):
+        super().__init__(message)
+        self.round = round
+        self.leaf = leaf
+        self.client = client
+
+
+def canon_array(v) -> np.ndarray:
+    """The canonical array a leaf is committed to — byte-identical to what
+    ``save_checkpoint`` writes into the ``.npz`` (bf16/exotic dtypes widen
+    losslessly to f32), so live-state commitments and npz-recomputed
+    commitments always agree."""
+    a = np.asarray(v)
+    if a.dtype.kind not in "fiub" or str(a.dtype) == "bfloat16":
+        a = a.astype(np.float32)
+    return np.ascontiguousarray(a)
+
+
+def leaf_digest(arr, chunk_bytes: int = CHUNK_BYTES) -> str:
+    """Chunked sha256 digest of one leaf.
+
+    The outer hash covers a shape/dtype header plus the sha256 of every
+    ``chunk_bytes``-sized slice of the canonical bytes — two tensors with
+    the same bytes but different shapes (or dtypes) digest differently.
+    """
+    a = canon_array(arr)
+    outer = hashlib.sha256()
+    outer.update(f"{a.dtype.str}|{a.shape}|{chunk_bytes}".encode())
+    raw = a.tobytes()
+    for off in range(0, max(len(raw), 1), chunk_bytes):
+        outer.update(hashlib.sha256(raw[off:off + chunk_bytes]).digest())
+    return outer.hexdigest()
+
+
+def proxy_leaves(proxy_params) -> Dict[str, Any]:
+    """``{leaf path: array}`` of a client's released proxy parameters,
+    under the same '/'-joined key paths the checkpoint npz uses (relative
+    to the ``proxy/params/`` namespace)."""
+    return flatten_with_paths(proxy_params)
+
+
+def client_commitment(proxy_params) -> Tuple[str, Dict[str, str]]:
+    """Commitment of one client's released proxy: sha256 over the sorted
+    ``(leaf path, leaf digest)`` pairs. Returns ``(digest, per-leaf
+    digests)`` — the per-leaf dict is what the audit trail records so a
+    later verifier can name the exact divergent leaf."""
+    leaves = {path: leaf_digest(a)
+              for path, a in proxy_leaves(proxy_params).items()}
+    blob = json.dumps(leaves, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest(), leaves
+
+
+def chain_step(prev: str, rounds_done: int, n_clients: int,
+               client_digests: Dict[str, str]) -> str:
+    """One link of the snapshot hash chain:
+    ``h_t = H(h_{t-1} || {rounds_done, n_clients} || client commitments)``.
+
+    ``client_digests`` maps ``c0042``-style client keys to their
+    :func:`client_commitment` digests. The metadata is restricted to
+    backend-invariant facts — see the module docstring.
+    """
+    blob = json.dumps({"prev": prev,
+                       "meta": {"rounds_done": int(rounds_done),
+                                "n_clients": int(n_clients)},
+                       "clients": client_digests},
+                      sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def npz_client_leaves(arrays: Dict[str, Any], k: int) -> Dict[str, Any]:
+    """Extract client ``k``'s committed proxy leaves from a flat snapshot
+    mapping (an open ``np.load`` handle or plain dict keyed by the
+    '/'-joined payload paths), re-keyed relative to ``proxy/params/`` so
+    the digests line up with :func:`client_commitment`'s."""
+    prefix = f"clients/{CLIENT_KEY_FMT.format(k)}/{PROXY_PREFIX}"
+    return {key[len(prefix):]: arrays[key]
+            for key in arrays if key.startswith(prefix)}
+
+
+def snapshot_client_digests(arrays: Dict[str, Any], n_clients: int
+                            ) -> Tuple[Dict[str, str], Dict[str, Dict[str, str]]]:
+    """Per-client commitments of a whole snapshot's released proxies.
+
+    Returns ``(digests, leaf_digests)``: ``digests[c0042]`` is the client
+    commitment, ``leaf_digests[c0042][path]`` the chunked per-leaf digests
+    behind it (recorded in the audit trail for leaf-naming refusals).
+    """
+    digests: Dict[str, str] = {}
+    leaves_out: Dict[str, Dict[str, str]] = {}
+    for k in range(n_clients):
+        ckey = CLIENT_KEY_FMT.format(k)
+        leaves = {path: leaf_digest(a)
+                  for path, a in npz_client_leaves(arrays, k).items()}
+        blob = json.dumps(leaves, sort_keys=True).encode()
+        digests[ckey] = hashlib.sha256(blob).hexdigest()
+        leaves_out[ckey] = leaves
+    return digests, leaves_out

@@ -537,6 +537,18 @@ class FederationEngine:
         # allclose, not bit-identical, to the plain-XLA reference (f32
         # accumulation, fused de-bias). shard_map keeps its ppermute path.
         self.use_pallas = bool(getattr(cfg, "use_pallas", False))
+        # Commitment verification of the received proxies (loop backend;
+        # cfg.verify_commitments): each sender's released proxy is
+        # committed to (repro.core.commit.client_commitment) before the
+        # exchange and every receiver recomputes the digest from the wire
+        # payload before mixing — a tampered in-flight proxy refuses with
+        # a CommitmentError naming the client and round. transmit_tamper
+        # is the adversary hook the byzantine tests inject (host-side
+        # (flat [K, D] numpy, t) -> flat, e.g. attacks.bitflip_proxy);
+        # None leaves the exchange untouched.
+        self.verify_commitments = bool(getattr(cfg, "verify_commitments",
+                                               False))
+        self.transmit_tamper: Optional[Callable] = None
         # donation lets XLA update params/opt in place; CPU only warns
         self._donate = (0,) if jax.default_backend() != "cpu" else ()
         self._masked_sampler = _sampler_accepts_n_valid(sample_fn)
@@ -940,6 +952,8 @@ class FederationEngine:
             P = mix_matrix(self.mix, t, self.K, self.cfg.topology, act)
             flat = jnp.stack([tree_flatten_vector(s["proxy"]["params"])
                               for s in states])
+            if self.verify_commitments or self.transmit_tamper is not None:
+                flat = self._verified_exchange(flat, states, t)
             w = jnp.asarray([jnp.asarray(s["w"]) for s in states], flat.dtype)
             if self._compressed:
                 # same compressed exchange — and the same codec RNG key
@@ -969,7 +983,44 @@ class FederationEngine:
             return {"clients": states, "ef_state": ef_state}, metrics
         return states, metrics
 
-    # -- vmap / shard_map backends ------------------------------------------
+    def _verified_exchange(self, flat, states, t: int):
+        """Commitment-checked wire hop of the loop backend's exchange.
+
+        Each sender DECLARES the commitment of the proxy it releases
+        (hashed from its parameter tree, the same digest its audit-trail
+        entries carry); the stacked wire payload then passes through the
+        adversary hook (``transmit_tamper``, when injected); finally every
+        receiver reconstructs the per-client trees from the received rows
+        and recomputes the commitments. Any row whose digest no longer
+        matches its sender's declaration raises ``CommitmentError`` naming
+        the client and round BEFORE the tampered mass can be mixed. This is
+        an in-process simulation of the cross-host protocol (declare →
+        transmit → recompute → compare); the untampered path returns the
+        payload bit-identically, so verified and unverified runs share one
+        trajectory. Only the loop backend verifies receipts — it is the
+        heterogeneous/reference executor; compiled backends are covered by
+        the restore-time chain verification."""
+        from .commit import CommitmentError, client_commitment
+        declared = [client_commitment(s["proxy"]["params"])[0]
+                    for s in states]
+        flat_np = np.asarray(flat)
+        if self.transmit_tamper is not None:
+            flat_np = np.asarray(self.transmit_tamper(np.array(flat_np), t))
+            assert flat_np.shape == (self.K,) + np.shape(flat)[1:], (
+                "transmit_tamper must preserve the [K, D] wire shape")
+        if self.verify_commitments:
+            like = states[0]["proxy"]["params"]
+            for k in range(self.K):
+                received, _ = client_commitment(
+                    tree_unflatten_vector(jnp.asarray(flat_np[k]), like))
+                if received != declared[k]:
+                    raise CommitmentError(
+                        f"received proxy of client {k} at round {t} does "
+                        f"not match its declared commitment (declared "
+                        f"{declared[k]!r}, recomputed {received!r}) — the "
+                        "proxy was tampered with in flight; refusing to "
+                        "mix it", round=t, client=k)
+        return jnp.asarray(flat_np, flat.dtype)
 
     def _stack_data(self, data):
         """Padded-stacked device copy of ``data`` + per-client valid

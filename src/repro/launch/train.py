@@ -175,6 +175,14 @@ def main(argv=None) -> int:
                     help="top-k kept fraction of the flattened proxy "
                          "(with --compress topk; 0.25 -> ~6.4x fewer "
                          "bytes on the wire)")
+    ap.add_argument("--verify-commitments", action="store_true",
+                    help="verifiable federation (repro.core.commit): check "
+                         "every received proxy against its sender's "
+                         "declared commitment before mixing (loop backend) "
+                         "and restore checkpoints in strict commitment "
+                         "mode — snapshots whose hash chain, leaf digests "
+                         "or fingerprint records fail verification are "
+                         "refused with the divergent round/leaf named")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="snapshot complete federation state here (enables "
                          "preemption-tolerant runs; see repro.checkpoint)")
@@ -199,6 +207,7 @@ def main(argv=None) -> int:
         staleness=args.staleness, n_shards=args.n_shards,
         use_pallas=args.use_pallas, compress=args.compress,
         compress_ratio=args.compress_ratio,
+        verify_commitments=args.verify_commitments,
         dp=DPConfig(enabled=not args.no_dp, clip_norm=args.clip,
                     noise_multiplier=args.sigma))
     if args.staleness and args.backend not in ("async", "hier"):
@@ -261,7 +270,8 @@ def main(argv=None) -> int:
                 fl, arch=cfg.name, proxy=proxy.name, clients=K,
                 # data-shaping flag: resuming under a different skew would
                 # silently continue on a different cohort
-                size_skew=args.size_skew))
+                size_skew=args.size_skew),
+            verify=fl.verify_commitments)
         if args.resume:
             restored = ckpt.restore_latest(engine, like=state, base_key=key)
             if restored is not None:

@@ -34,6 +34,15 @@ def test_auc_ties():
     assert auc_from_scores(np.ones(10), np.ones(10)) == pytest.approx(0.5)
 
 
+def test_auc_empty_side_raises():
+    """An empty member or non-member side used to divide by zero (NaN AUC
+    propagating into result tables); now it names the broken split."""
+    for m, n in ((np.array([]), np.ones(3)), (np.ones(3), np.array([])),
+                 (np.array([]), np.array([]))):
+        with pytest.raises(ValueError, match="non-empty"):
+            auc_from_scores(m, n)
+
+
 @given(st.integers(0, 10_000))
 def test_auc_bounds(seed):
     rng = np.random.default_rng(seed)

@@ -1,0 +1,391 @@
+"""Verifiable federation — hash-chained proxy commitments & tamper refusal.
+
+Three layers under test: the commitment primitives in ``repro.core.commit``
+(chunked leaf digests, client commitments, the hash chain), the
+``FederationCheckpointer`` integration (every snapshot stamped and chained
+through ``audit.jsonl``, restore REFUSES on any divergence, naming the
+first divergent round and leaf), and the in-flight verification hook of
+the loop backend (a byzantine-tampered transmitted proxy is refused before
+mixing). The tamper matrix here is the acceptance criterion of the
+verifiable-federation milestone: bit-flipped npz leaf, truncated audit
+trail, reordered meta files and an in-flight bit flip must each produce a
+:class:`~repro.core.commit.CommitmentError` (distinct from the config
+fingerprint ``ValueError``) that names the offending round/leaf/client.
+"""
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import FederationCheckpointer, config_fingerprint
+from repro.configs.base import DPConfig, ProxyFLConfig
+from repro.core import commit
+from repro.core.attacks import bitflip_proxy
+from repro.core.baselines import run_federated
+from repro.core.commit import (CHUNK_BYTES, GENESIS, CommitmentError,
+                               chain_step, client_commitment, leaf_digest,
+                               snapshot_client_digests)
+from repro.core.engine import dml_engine
+from repro.core.protocol import ModelSpec
+from repro.data.synthetic import make_classification_data
+from repro.nn.modules import tree_flatten_vector
+from repro.nn.vision import get_vision_model
+
+K, N_CLASSES, SHAPE = 4, 10, (14, 14, 1)
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_data(key, 1200, SHAPE, N_CLASSES, sep=2.0)
+    return [(x[i * 300:(i + 1) * 300], y[i * 300:(i + 1) * 300])
+            for i in range(K)]
+
+
+@pytest.fixture(scope="module")
+def mlp_spec():
+    vm = get_vision_model("mlp")
+    return ModelSpec("mlp", lambda k: vm.init(k, SHAPE, N_CLASSES), vm.apply)
+
+
+CFG = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=1,
+                    dp=DPConfig(enabled=True))
+
+
+def _run(spec, data, cfg, backend, **kw):
+    return run_federated("proxyfl", [spec] * K, spec, data, data[0], cfg,
+                         seed=0, eval_every=cfg.rounds, backend=backend, **kw)
+
+
+@pytest.fixture(scope="module")
+def committed_dir(tmp_path_factory, fed_data, mlp_spec):
+    """One real 2-round vmap run with per-round checkpoints — the tamper
+    matrix below each copies this directory and corrupts the copy, so a
+    single training run serves every case."""
+    d = str(tmp_path_factory.mktemp("committed"))
+    _run(mlp_spec, fed_data, CFG, "vmap",
+         checkpoint_dir=d, checkpoint_every=1)
+    return os.path.join(d, "proxyfl_s0")  # run_federated's namespacing
+
+
+def _copy(src, tmp_path):
+    dst = os.path.join(str(tmp_path), "fed")
+    shutil.copytree(src, dst)
+    return dst
+
+
+def _recorded_fp(d):
+    """The fingerprint run_federated stamped (it folds in method/seed/arch
+    context beyond the bare config) — the tamper tests want to get PAST the
+    fingerprint gate and hit the commitment chain."""
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".meta.json"):
+            with open(os.path.join(d, name)) as f:
+                return json.load(f).get("fingerprint")
+    return None
+
+
+def _restore(d, fed_data, mlp_spec, cfg=CFG, verify=False):
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, cfg, backend="vmap")
+    key = jax.random.PRNGKey(0)
+    ck = FederationCheckpointer(d, every=1, fingerprint=_recorded_fp(d),
+                                verify=verify)
+    return ck.restore_latest(eng, like=eng.init_states(key), base_key=None)
+
+
+# ---------------------------------------------------------------------------
+# commitment primitives
+
+
+@pytest.mark.fast
+def test_leaf_digest_covers_bytes_shape_dtype_and_chunking():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((8, 16)).astype(np.float32)
+    assert leaf_digest(a) == leaf_digest(a.copy())  # deterministic
+    flipped = a.copy()
+    flipped.view(np.uint32)[0, 0] ^= 1  # one ULP, lowest mantissa bit
+    assert leaf_digest(flipped) != leaf_digest(a)
+    assert leaf_digest(a.reshape(16, 8)) != leaf_digest(a)   # same bytes
+    assert leaf_digest(a.astype(np.float64)) != leaf_digest(a)
+    # chunk size is part of the definition, and the chunk loop must cover
+    # every byte (incl. the ragged tail and the empty-array edge)
+    assert leaf_digest(a, chunk_bytes=64) != leaf_digest(a, chunk_bytes=128)
+    assert leaf_digest(np.zeros(0, np.float32))  # no crash, non-empty hex
+    assert CHUNK_BYTES == 1 << 20  # changing it silently rewrites history
+
+
+@pytest.mark.fast
+def test_client_commitment_matches_npz_recomputation():
+    """A commitment computed from LIVE params equals one recomputed from
+    the snapshot arrays under the npz key layout — including the bf16→f32
+    canonicalization save_checkpoint applies."""
+    params = {"fc1": {"w": jnp.linspace(-1, 1, 12, dtype=jnp.bfloat16)
+                      .reshape(3, 4),
+                      "b": jnp.arange(4, dtype=jnp.float32)}}
+    digest, leaves = client_commitment(params)
+    flat = {f"clients/c0002/proxy/params/{p}": np.asarray(
+        a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a)
+        for p, a in (("fc1/w", params["fc1"]["w"]),
+                     ("fc1/b", params["fc1"]["b"]))}
+    digests, leaves_out = snapshot_client_digests(flat, 3)
+    assert digests["c0002"] == digest
+    assert leaves_out["c0002"] == leaves
+    assert leaves_out["c0000"] == {}  # absent clients digest the empty tree
+
+
+@pytest.mark.fast
+def test_chain_step_depends_on_every_input():
+    d = {"c0000": "a" * 64, "c0001": "b" * 64}
+    h = chain_step(GENESIS, 1, 2, d)
+    assert h != chain_step("1" * 64, 1, 2, d)
+    assert h != chain_step(GENESIS, 2, 2, d)
+    assert h != chain_step(GENESIS, 1, 3, d)
+    assert h != chain_step(GENESIS, 1, 2, {**d, "c0001": "c" * 64})
+    assert h == chain_step(GENESIS, 1, 2, dict(reversed(d.items())))
+
+
+@pytest.mark.fast
+def test_commitment_error_is_distinct_and_carries_location():
+    e = CommitmentError("boom", round=3, leaf="proxy/params/fc1/w", client=1)
+    assert isinstance(e, ValueError)  # callers catching ValueError still do
+    assert (e.round, e.leaf, e.client) == (3, "proxy/params/fc1/w", 1)
+    assert CommitmentError("x").round is None
+
+
+# ---------------------------------------------------------------------------
+# checkpointer integration: stamp + chain
+
+
+def test_snapshots_are_stamped_and_chained(committed_dir):
+    ck = FederationCheckpointer(committed_dir)
+    entries = ck._audit_entries()
+    assert [e["rounds_done"] for e in entries] == [1, 2]
+    assert entries[0]["prev_commitment"] == GENESIS
+    assert entries[1]["prev_commitment"] == entries[0]["commitment"]
+    for r, e in zip((1, 2), entries):
+        with open(os.path.join(committed_dir,
+                               f"round_{r:06d}.meta.json")) as f:
+            meta = json.load(f)
+        assert meta["commitment"] == e["commitment"]
+        assert meta["prev_commitment"] == e["prev_commitment"]
+        assert meta["fingerprint"]  # derived, never stamped null
+        # the recorded per-leaf digests recompose into the commitment
+        assert set(e["clients"]) == {f"c{k:04d}" for k in range(K)}
+        assert e["commitment"] == chain_step(
+            e["prev_commitment"], r, K, e["clients"])
+
+
+def test_untampered_restore_verifies_in_strict_mode(committed_dir, fed_data,
+                                                    mlp_spec):
+    state, done = _restore(committed_dir, fed_data, mlp_spec, verify=True)
+    assert done == 2
+    assert FederationCheckpointer(committed_dir).verify_chain(2)
+
+
+# ---------------------------------------------------------------------------
+# the tamper matrix — every corruption refused, naming round/leaf
+
+
+def test_bitflipped_npz_leaf_refused(committed_dir, tmp_path, fed_data,
+                                     mlp_spec):
+    d = _copy(committed_dir, tmp_path)
+    npz_path = os.path.join(d, "round_000002.npz")
+    with np.load(npz_path) as f:
+        arrays = {k: f[k] for k in f.files}
+    leaf = next(k for k in sorted(arrays)
+                if k.startswith("clients/c0001/proxy/params/"))
+    arrays[leaf].reshape(-1).view(np.uint32)[0] ^= 1  # single bit flip
+    np.savez(npz_path, **arrays)
+    with pytest.raises(CommitmentError, match="tampered") as e:
+        _restore(d, fed_data, mlp_spec)
+    assert e.value.round == 2
+    assert e.value.client == 1
+    assert e.value.leaf == leaf[len("clients/c0001/"):]
+    assert e.value.leaf in str(e.value)  # refusal NAMES the leaf
+
+
+def test_truncated_audit_trail_refused(committed_dir, tmp_path, fed_data,
+                                       mlp_spec):
+    d = _copy(committed_dir, tmp_path)
+    audit = os.path.join(d, "audit.jsonl")
+    with open(audit) as f:
+        first = f.readline()
+    with open(audit, "w") as f:
+        f.write(first)  # round 2's entry gone
+    with pytest.raises(CommitmentError, match="no entry for round 2") as e:
+        _restore(d, fed_data, mlp_spec)
+    assert e.value.round == 2
+
+
+def test_reordered_meta_files_refused(committed_dir, tmp_path, fed_data,
+                                      mlp_spec):
+    d = _copy(committed_dir, tmp_path)
+    m1 = os.path.join(d, "round_000001.meta.json")
+    m2 = os.path.join(d, "round_000002.meta.json")
+    tmp = m1 + ".swap"
+    os.replace(m1, tmp), os.replace(m2, m1), os.replace(tmp, m2)
+    with pytest.raises(CommitmentError, match="swapped") as e:
+        _restore(d, fed_data, mlp_spec)
+    assert e.value.round == 2
+
+
+def test_rewritten_audit_entry_refused(committed_dir, tmp_path, fed_data,
+                                       mlp_spec):
+    """Rewriting a PAST entry breaks the chain at that round even though
+    the restored round itself is untouched — that is the point of chaining."""
+    d = _copy(committed_dir, tmp_path)
+    audit = os.path.join(d, "audit.jsonl")
+    with open(audit) as f:
+        entries = [json.loads(line) for line in f]
+    entries[0]["clients"]["c0000"] = "f" * 64
+    with open(audit, "w") as f:
+        for e in entries:
+            f.write(json.dumps(e, sort_keys=True) + "\n")
+    with pytest.raises(CommitmentError) as e:
+        _restore(d, fed_data, mlp_spec)
+    assert e.value.round == 1  # FIRST divergent round, not the latest
+
+
+def test_resave_is_idempotent_and_forks_are_refused(tmp_path, fed_data,
+                                                    mlp_spec):
+    """Replaying a save of an audited round (the resume path re-saves the
+    round it restored) verifies bit-identity and appends nothing; saving an
+    EARLIER round than the trail records would fork history and is refused."""
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, CFG, backend="vmap")
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    ck = FederationCheckpointer(str(tmp_path), every=1)
+    ck.save(eng, state, 1, base_key=key)     # rounds_done=2
+    ck.save(eng, state, 1, base_key=key)     # same payload: no-op
+    assert len(ck._audit_entries()) == 1
+    with pytest.raises(CommitmentError, match="fork"):
+        ck.save(eng, state, 0, base_key=key)  # rounds_done=1 never audited
+    # a bit-identical replay of an AUDITED round is fine even when later
+    # rounds exist (a killed run deterministically re-run into its own
+    # directory — the blocked-cadence scenario of tests/test_blocks.py)
+    ck2 = FederationCheckpointer(os.path.join(str(tmp_path), "b"), every=1)
+    ck2.save(eng, state, 0, base_key=key)
+    ck2.save(eng, state, 1, base_key=key)
+    ck2.save(eng, state, 0, base_key=key)    # audited replay: no-op
+    assert len(ck2._audit_entries()) == 2
+
+
+# ---------------------------------------------------------------------------
+# in-flight verification (loop backend receipt check)
+
+
+def test_inflight_tamper_refused_on_loop_backend(fed_data, mlp_spec):
+    cfg = dataclasses.replace(CFG, rounds=1)
+    with pytest.raises(CommitmentError, match="in flight") as e:
+        _run(mlp_spec, fed_data, cfg, "loop", verify_commitments=True,
+             transmit_tamper=bitflip_proxy(2, bit=22, index=5))
+    assert e.value.client == 2
+    assert e.value.round == 0
+
+
+def test_inflight_tamper_unverified_silently_diverges(fed_data, mlp_spec):
+    """The control: WITHOUT verification the same single-bit flip completes
+    and corrupts the federation — which is why the receipt check exists."""
+    cfg = dataclasses.replace(CFG, rounds=1)
+    clean = _run(mlp_spec, fed_data, cfg, "loop")
+    tampered = _run(mlp_spec, fed_data, cfg, "loop",
+                    transmit_tamper=bitflip_proxy(2, bit=22, index=5))
+    a = np.stack([np.asarray(tree_flatten_vector(c.proxy_params))
+                  for c in clean["clients"]])
+    b = np.stack([np.asarray(tree_flatten_vector(c.proxy_params))
+                  for c in tampered["clients"]])
+    assert not np.array_equal(a, b)
+
+
+def test_verified_run_trajectory_is_bit_identical(fed_data, mlp_spec):
+    """verify_commitments observes state but never changes it — the claim
+    behind excluding the flag from the config fingerprint. Running AFTER
+    the tamper tests above also regresses the engine-cache leak: engines
+    are LRU-cached by config, so run_federated must reset the
+    transmit_tamper hook or the previous test's adversary corrupts (and
+    here, fails verification of) this clean run."""
+    cfg = dataclasses.replace(CFG, rounds=1)
+    ref = _run(mlp_spec, fed_data, cfg, "loop")
+    ver = _run(mlp_spec, fed_data, cfg, "loop", verify_commitments=True)
+    for role in ("proxy_params", "private_params"):
+        a = np.stack([np.asarray(tree_flatten_vector(getattr(c, role)))
+                      for c in ref["clients"]])
+        b = np.stack([np.asarray(tree_flatten_vector(getattr(c, role)))
+                      for c in ver["clients"]])
+        np.testing.assert_array_equal(a, b, err_msg=role)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-integrity bugfix regressions
+
+
+@pytest.mark.fast
+def test_latest_round_survives_corrupt_pointer(committed_dir, tmp_path):
+    """A garbage LATEST file used to crash latest_round() with an unguarded
+    int(); now every corruption falls back to the directory scan."""
+    d = _copy(committed_dir, tmp_path)
+    ck = FederationCheckpointer(d)
+    for garbage in ("", "deadbeef", "round_xyz", "round_", "round_000009"):
+        with open(os.path.join(d, "LATEST"), "w") as f:
+            f.write(garbage)
+        assert ck.latest_round() == 2, repr(garbage)
+
+
+@pytest.mark.fast
+def test_pointer_and_scan_share_completeness_criterion(committed_dir,
+                                                       tmp_path):
+    """LATEST points at round 2 but its meta.json is gone: the pointer path
+    must NOT trust the npz alone (it used to, while the scan required
+    meta.json — the two discovery paths could disagree); both now resolve
+    to the newest snapshot with npz + manifest + meta all on disk."""
+    d = _copy(committed_dir, tmp_path)
+    os.remove(os.path.join(d, "round_000002.meta.json"))
+    assert FederationCheckpointer(d).latest_round() == 1
+    os.remove(os.path.join(d, "round_000001.json"))  # manifest counts too
+    assert FederationCheckpointer(d).latest_round() is None
+
+
+def test_fingerprintless_checkpointer_still_blocks_config_drift(
+        tmp_path, fed_data, mlp_spec):
+    """Constructing the checkpointer without a fingerprint used to make the
+    check silently vacuous (None stamped, None compared). Now save derives
+    one from the engine's own config, and a restore under a drifted config
+    refuses with the fingerprint ValueError (NOT a CommitmentError)."""
+    eng = dml_engine((mlp_spec,) * K, mlp_spec, CFG, backend="vmap")
+    key = jax.random.PRNGKey(0)
+    state = eng.init_states(key)
+    ck = FederationCheckpointer(str(tmp_path), every=1)  # no fingerprint
+    ck.save(eng, state, 0, base_key=key)
+    with open(os.path.join(str(tmp_path), "round_000001.meta.json")) as f:
+        assert json.load(f)["fingerprint"]
+    drifted = dataclasses.replace(CFG, lr=5e-4)
+    eng2 = dml_engine((mlp_spec,) * K, mlp_spec, drifted, backend="vmap")
+    ck2 = FederationCheckpointer(str(tmp_path), every=1)
+    with pytest.raises(ValueError, match="fingerprint") as e:
+        ck2.restore_latest(eng2, like=eng2.init_states(key))
+    assert not isinstance(e.value, CommitmentError)
+    # the original config still restores (derivation is stable)
+    assert ck.restore_latest(eng, like=state)[1] == 1
+
+
+def test_null_recorded_fingerprint_warns_and_strict_refuses(
+        committed_dir, tmp_path, fed_data, mlp_spec):
+    """Legacy snapshots that stamped fingerprint=null warn loudly on
+    restore, and refuse outright under verify_commitments."""
+    d = _copy(committed_dir, tmp_path)
+    mp = os.path.join(d, "round_000002.meta.json")
+    with open(mp) as f:
+        meta = json.load(f)
+    meta["fingerprint"] = None
+    with open(mp, "w") as f:
+        json.dump(meta, f)
+    with pytest.warns(UserWarning, match="no config fingerprint"):
+        state, done = _restore(d, fed_data, mlp_spec)
+    assert done == 2
+    with pytest.raises(CommitmentError, match="refusing"):
+        _restore(d, fed_data, mlp_spec, verify=True)

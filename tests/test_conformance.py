@@ -489,6 +489,39 @@ def test_hier_engine_k8_s4_matches_vmap_bitwise(mlp_spec):
 
 
 # ---------------------------------------------------------------------------
+# commitment-chain conformance (verifiable federation)
+
+
+def test_commitment_chain_backend_invariant_at_tau0(tmp_path, datasets,
+                                                    mlp_spec):
+    """loop, vmap and hier (S=2) snapshots of the same federation must
+    produce the IDENTICAL audit trail — same per-leaf digests, same client
+    commitments, same hash chain — since commitments are computed from the
+    backend-portable canonical payload. lr=0 isolates the exchange: with
+    local steps active the loop and stacked backends agree only to ~1e-8
+    (XLA fuses the per-step chain differently — the documented-allclose
+    rows of CASES), which sha256 cannot absorb; mix-only dynamics are
+    bitwise across all three backends, so chain equality here pins the
+    commitment layer's backend invariance without conflating it with
+    float-fusion divergence."""
+    import json
+
+    cfg = ProxyFLConfig(n_clients=K, rounds=2, batch_size=50, local_steps=1,
+                        lr=0.0, dp=DPConfig(enabled=True))
+    chains = {}
+    for backend, shards in (("loop", 1), ("vmap", 1), ("hier", 2)):
+        d = os.path.join(str(tmp_path), backend)
+        run_federated("proxyfl", [mlp_spec] * K, mlp_spec, datasets["rect"],
+                      datasets["rect"][0], cfg, seed=0, eval_every=cfg.rounds,
+                      backend=backend, n_shards=shards,
+                      checkpoint_dir=d, checkpoint_every=1)
+        with open(os.path.join(d, "proxyfl_s0", "audit.jsonl")) as f:
+            chains[backend] = [json.loads(line) for line in f]
+    assert [e["rounds_done"] for e in chains["vmap"]] == [1, 2]
+    assert chains["loop"] == chains["vmap"] == chains["hier"]
+
+
+# ---------------------------------------------------------------------------
 # async invariants beyond pairwise agreement
 
 

@@ -174,5 +174,10 @@ FLAG_EXEMPT_FIELDS: dict = {}
 
 
 # Federation-level scan-carry keys exempt from FED003 (carry-coverage).
-# Empty today: stale_theta/stale_w/ef_state all ride _ckpt_payload.
+# Empty today: stale_theta/stale_w/ef_state/hier_buffer/hier_w all ride
+# _ckpt_payload. Note the verifiable-federation layer (PR 10) adds NO
+# carried state — commitment records (audit.jsonl, the meta commitment
+# stamps) are on-disk audit artifacts recomputed from the canonical
+# payload, never scan-carries, so they are outside FED003's domain by
+# construction (see docs/INVARIANTS.md, "Commitment chain").
 CARRY_EXEMPT_KEYS: dict = {}
